@@ -1,0 +1,61 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import fl
+from repro.core.server import FedServer
+from repro.data import synthetic
+
+_TASK_CACHE: dict = {}
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def get_task(num_train: int = 12000, num_test: int = 2000, seed: int = 0):
+    key = (num_train, num_test, seed)
+    if key not in _TASK_CACHE:
+        _TASK_CACHE[key] = synthetic.make_image_task(
+            seed=seed, num_train=num_train, num_test=num_test
+        )
+    return _TASK_CACHE[key]
+
+
+def node_spec(n_iid: int, n_noniid: int, x: int):
+    return [("iid", None)] * n_iid + [("xclass", x)] * n_noniid
+
+
+def run_fl(
+    method: str,
+    spec: list,
+    *,
+    model: str = "mlr",
+    rounds: int = 60,
+    target: float | None = 0.85,
+    alpha: float = 5.0,
+    batch_size: int = 50,
+    base_lr: float = 0.05,
+    samples: int = 600,
+    seed: int = 0,
+    eval_every: int = 2,
+):
+    """Returns (history, seconds_per_round)."""
+    train, test = get_task()
+    nodes = synthetic.make_federated(train, spec, samples_per_node=samples,
+                                     seed=seed + 1)
+    n = len(spec)
+    cfg = fl.FLConfig(
+        num_clients=n, clients_per_round=n, local_steps=samples // batch_size,
+        method=method, alpha=alpha, base_lr=base_lr,
+    )
+    server = FedServer(model, cfg, nodes, test, batch_size=batch_size, seed=seed)
+    server.step()  # warm the jit cache before timing
+    t0 = time.time()
+    hist = server.run(rounds, target_acc=target, eval_every=eval_every)
+    dt = time.time() - t0
+    done = len(hist.loss) or 1
+    return hist, dt / done

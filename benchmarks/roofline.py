@@ -1,0 +1,104 @@
+"""Roofline-term derivation from dry-run records (EXPERIMENTS.md §Roofline).
+
+Terms (per device; the compiled module IS the per-device program, so
+cost_analysis/HLO figures are already per-chip — dividing a global total by
+`chips` is the same number):
+
+  t_compute    = HLO_FLOPs_per_dev / 197e12        (bf16 MXU peak, v5e)
+  t_memory     = HLO_bytes_per_dev / 819e9         (HBM bandwidth)
+  t_collective = collective_result_bytes / 50e9    (per-link ICI)
+
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE) and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs * chips).
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def load_records(path: str) -> list[dict]:
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"], r.get("tag", "baseline"))] = r
+    return list(recs.values())
+
+
+def _tokens(rec: dict) -> int:
+    meta = rec.get("meta", {})
+    if "K" in meta:  # train: K clients x tau steps x B x T
+        seq = {"train_4k": 4096}.get(rec["shape"], 4096)
+        return meta["K"] * meta["tau"] * meta["B"] * seq
+    if "T" in meta:  # prefill
+        return meta["B"] * meta["T"]
+    return meta.get("B", 1)  # decode: one token per sequence
+
+
+def model_flops(rec: dict, n_active: int) -> float:
+    mult = 6.0 if rec["shape"] == "train_4k" else 2.0  # fwd+bwd vs fwd
+    return mult * n_active * _tokens(rec)
+
+
+def roofline_rows(records: Iterable[dict]) -> list[dict]:
+    from repro.configs.registry import ARCHS
+
+    rows = []
+    for r in sorted(records, key=lambda x: (x["arch"], x["shape"], x["mesh"],
+                                            x.get("tag", "baseline"))):
+        chips = r["devices"]
+        # prefer the loop-aware scoped analysis (XLA cost_analysis counts
+        # while-loop bodies once; see repro.launch.hlo_scoped)
+        s = r.get("scoped")
+        if s and s.get("flops", 0) > 0:
+            flops, nbytes = s["flops"], s["hbm_bytes"]
+            coll = s["collectives"].get("total", 0)
+        else:
+            flops, nbytes = r["flops"], r["bytes_accessed"]
+            coll = r["collectives"].get("total", 0)
+        t_comp = flops / PEAK_FLOPS_BF16 if flops > 0 else 0.0
+        t_mem = nbytes / HBM_BW if nbytes > 0 else 0.0
+        t_coll = coll / ICI_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        bottleneck = max(terms, key=terms.get)
+        cfg = ARCHS.get(r["arch"])
+        mf = model_flops(r, cfg.active_param_count()) if cfg else 0.0
+        useful = mf / (flops * chips) if flops > 0 else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "tag": r.get("tag", "baseline"),
+            "t_compute": t_comp, "t_memory": t_mem, "t_collective": t_coll,
+            "bottleneck": bottleneck, "model_flops": mf,
+            "useful_ratio": useful,
+            "temp_gib": r["memory"]["temp_bytes"] / 2**30,
+            "compile_s": r.get("compile_s", 0),
+        })
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | tag | t_comp (s) | t_mem (s) | t_coll (s) "
+           "| bottleneck | useful | temp GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    body = "".join(
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} "
+        f"| {r['t_compute']:.2e} | {r['t_memory']:.2e} | {r['t_collective']:.2e} "
+        f"| **{r['bottleneck']}** | {r['useful_ratio']:.2f} "
+        f"| {r['temp_gib']:.1f} |\n"
+        for r in rows
+    )
+    return hdr + body
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = roofline_rows(load_records(sys.argv[1] if len(sys.argv) > 1
+                                      else "results/dryrun.jsonl"))
+    print(markdown_table(rows))

@@ -1,0 +1,92 @@
+"""End-to-end federated LANGUAGE-MODEL training with FedAdp.
+
+    PYTHONPATH=src python examples/fl_lm_train.py --preset small --rounds 50
+    PYTHONPATH=src python examples/fl_lm_train.py --preset 100m --rounds 200
+
+Clients hold non-IID token streams (client-permuted Zipf vocabularies);
+each round runs tau local SGD steps per client and a FedAdp-weighted
+aggregation — the same compiled round the multi-pod dry-run lowers, here on
+the host device. Checkpoints land in results/.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt
+from repro.configs import registry
+from repro.core import fl
+from repro.core.weighting import AngleState
+from repro.data import synthetic
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+PRESETS = {
+    # ~20M params: fast CPU demo
+    "small": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                  d_ff=1024, vocab_size=8192),
+    # ~110M params: the "train a ~100M model" end-to-end driver
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 d_ff=3072, vocab_size=32768),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="small")
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--method", choices=["fedadp", "fedavg"], default="fedadp")
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--out", default="results/fl_lm.npz")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name=f"fl-lm-{args.preset}", arch_type="dense",
+                      tie_embeddings=True, dtype="float32", **PRESETS[args.preset])
+    params = transformer.init_params(jax.random.key(0), cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model {cfg.name}: {n/1e6:.1f}M params; "
+          f"K={args.clients} tau={args.tau} B={args.batch} T={args.seq}")
+
+    flcfg = fl.FLConfig(num_clients=args.clients, clients_per_round=args.clients,
+                        local_steps=args.tau, method=args.method,
+                        base_lr=args.lr, lr_decay=0.999)
+    round_fn = jax.jit(fl.make_round_fn(
+        lambda p, b: transformer.loss_fn(p, cfg, b), flcfg))
+    state = AngleState.init(args.clients)
+    prev = fl.init_prev_delta(params)
+    sel = jnp.arange(args.clients, dtype=jnp.int32)
+    sizes = jnp.ones((args.clients,))
+
+    for r in range(args.rounds):
+        toks = synthetic.lm_token_batches(
+            seed=r, num_clients=args.clients, batch=args.tau * args.batch,
+            seq=args.seq, vocab=cfg.vocab_size,
+        ).reshape(args.clients, args.tau, args.batch, args.seq)
+        t0 = time.time()
+        params, state, prev, m = round_fn(
+            params, state, prev, {"tokens": jnp.asarray(toks)}, sel, sizes,
+            jnp.int32(r),
+        )
+        if r % 5 == 0 or r == args.rounds - 1:
+            w = np.asarray(m["weights"])
+            print(f"round {r:4d} loss {float(m['loss']):.4f} "
+                  f"div {float(m['divergence']):.3f} "
+                  f"w=[{', '.join(f'{x:.3f}' for x in w)}] "
+                  f"({time.time()-t0:.1f}s)")
+    ckpt.save(args.out, {"params": params,
+                         "angles": {"smoothed": state.smoothed,
+                                    "count": state.count}})
+    print("checkpoint ->", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: FedAdp vs FedAvg on a non-IID federated image task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Ten nodes (5 IID + 5 one-class non-IID), multinomial logistic regression,
+~1 minute on CPU. Reproduces the paper's headline qualitatively: FedAdp
+reaches the accuracy target in far fewer communication rounds.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import fl
+from repro.core.server import FedServer
+from repro.data import synthetic
+
+
+def main() -> None:
+    print("building synthetic 10-class image task (offline MNIST stand-in)...")
+    train, test = synthetic.make_image_task(seed=0, num_train=12000, num_test=2000)
+    nodes = synthetic.make_federated(
+        train, [("iid", None)] * 5 + [("xclass", 1)] * 5,
+        samples_per_node=600, seed=1,
+    )
+    target = 0.85
+    results = {}
+    for method in ("fedavg", "fedadp"):
+        cfg = fl.FLConfig(num_clients=10, clients_per_round=10,
+                          local_steps=12, method=method, base_lr=0.05)
+        server = FedServer("mlr", cfg, nodes, test, batch_size=50, seed=0)
+        hist = server.run(rounds=60, target_acc=target, eval_every=2)
+        r = hist.rounds_to_target
+        results[method] = r
+        print(f"{method:8s}: rounds to {target:.0%} accuracy = "
+              f"{r if r else '>60'} (final acc {hist.final_accuracy:.3f})")
+    if results["fedadp"] and results["fedavg"]:
+        red = 100 * (1 - results["fedadp"] / results["fedavg"])
+        print(f"\nFedAdp communication-round reduction: {red:.1f}% "
+              f"(paper reports up to 54.1% on MNIST)")
+
+
+if __name__ == "__main__":
+    main()

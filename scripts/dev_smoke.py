@@ -1,0 +1,32 @@
+"""Dev harness: reduced-config forward/decode for every arch (not a test)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.models import transformer
+
+names = sys.argv[1:] or list(registry.ARCHS)
+for name in names:
+    cfg = registry.smoke(name)
+    key = jax.random.key(0)
+    params = transformer.init_params(key, cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    B, T = 2, 32
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab_size)}
+    if cfg.vision_prefix:
+        batch["vision_embeds"] = jnp.ones((B, cfg.vision_prefix, cfg.d_model), cfg.jdtype) * 0.01
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jnp.ones((B, cfg.encoder_len, cfg.d_model), cfg.jdtype) * 0.01
+    loss = transformer.loss_fn(params, cfg, batch)
+    # prefill + decode
+    logits, aux, cache = transformer.forward(params, cfg, batch, mode="prefill", max_len=T + 8)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    extras = {}
+    if cfg.vision_prefix:
+        p0 = T + cfg.vision_prefix
+        extras["positions"] = jnp.full((3, B, 1), p0, jnp.int32)
+    lg2, cache = transformer.decode_step(params, cfg, tok, cache, jnp.int32(T), extras)
+    ok = bool(jnp.isfinite(loss)) and bool(jnp.all(jnp.isfinite(lg2)))
+    print(f"{name:26s} params={n/1e6:8.2f}M loss={float(loss):8.4f} decode_ok={ok}")

@@ -1,0 +1,57 @@
+"""Pytree checkpointing: nested-dict trees <-> a single .npz file.
+
+Paths are flattened with '/' separators; tuples/namedtuples are converted
+to dicts by the caller (see core.server.ServerState.to_tree). Arrays are
+stored as numpy; bfloat16 round-trips via a uint16 view with a dtype tag.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_BF16_TAG = "__bf16__"
+
+
+def _flatten(tree: PyTree, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+        return out
+    key = prefix[:-1]
+    arr = np.asarray(tree)
+    if arr.dtype == jnp.bfloat16:
+        out[key + _BF16_TAG] = arr.view(np.uint16)
+    else:
+        out[key] = arr
+    return out
+
+
+def _unflatten(flat: dict) -> PyTree:
+    tree: dict = {}
+    for key, arr in flat.items():
+        if key.endswith(_BF16_TAG):
+            key = key[: -len(_BF16_TAG)]
+            arr = arr.view(jnp.bfloat16)
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(arr)
+    return tree
+
+
+def save(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    host = jax.tree.map(np.asarray, tree)
+    np.savez(path, **_flatten(host))
+
+
+def load(path: str) -> PyTree:
+    with np.load(path) as z:
+        return _unflatten({k: z[k] for k in z.files})

@@ -1,0 +1,75 @@
+"""The four assigned input shapes and ShapeDtypeStruct input specs.
+
+`input_specs(cfg, shape)` returns (step_kind, spec_dict) where step_kind is
+"train" | "prefill" | "decode" and the specs are jax.ShapeDtypeStruct
+stand-ins (no device allocation) suitable for jit(...).lower(**specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba, rwkv6
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# sliding window applied to *pure full-attention* archs for long_500k only
+# (DESIGN.md §5); SSM/hybrid/MLA archs run their native sub-quadratic path.
+LONG_CONTEXT_WINDOW = 8192
+
+
+def needs_swa_for_long(cfg: ModelConfig) -> bool:
+    return cfg.mla is None and cfg.block_pattern == ("attn",)
+
+
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    if shape.name == "long_500k" and needs_swa_for_long(cfg):
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def token_batch_specs(cfg: ModelConfig, B: int, T: int) -> dict:
+    """Specs for a full-sequence batch (train / prefill)."""
+    specs = {"tokens": _sds((B, T), jnp.int32)}
+    if cfg.vision_prefix:
+        specs["vision_embeds"] = _sds((B, cfg.vision_prefix, cfg.d_model), cfg.jdtype)
+        specs["positions"] = _sds((3, B, T + cfg.vision_prefix), jnp.int32)
+    if cfg.encoder_layers:
+        specs["enc_embeds"] = _sds((B, cfg.encoder_len, cfg.d_model), cfg.jdtype)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, B: int, max_len: int) -> dict:
+    """ShapeDtypeStruct tree matching transformer.init_cache (no alloc)."""
+    from repro.models import transformer
+
+    return jax.eval_shape(lambda: transformer.init_cache(cfg, B, max_len))
+
+
+def decode_specs(cfg: ModelConfig, B: int, seq_len: int) -> dict:
+    return {
+        "token": _sds((B, 1), jnp.int32),
+        "cache": cache_specs(cfg, B, seq_len),
+        "pos": _sds((), jnp.int32),
+    }

@@ -1,0 +1,144 @@
+"""FedAdp aggregation as an explicit shard_map collective schedule.
+
+The pjit engine (core/fl.py) leaves collective placement to GSPMD. This
+module expresses the SAME aggregation — the paper's actual contribution —
+with hand-placed collectives under `jax.shard_map`, which makes the
+communication pattern auditable and lets §Perf reason about it directly:
+
+  per model-shard:   g_avg = psum_{clients}(psi_i * delta_i)        (1)
+  per client:        dot_i = psum_{model}(<delta_i, g_avg>_shard)   (2)
+                     |d_i|^2, |g|^2 likewise
+  replicated:        theta -> Gompertz -> softmax weights           (3)
+  per model-shard:   delta = psum_{clients}(w_i * delta_i)          (4)
+
+Exactly two client-axis tree reductions (1)(4) plus O(K) scalar psums (2)
+per round — the minimum the algorithm admits with exact same-round angles.
+
+Works on any mesh whose client axis is "data" (+"pod") and whose tensor
+axes follow models/sharding.param_pspecs; on a 1x1 host mesh it reduces to
+plain math (used by the CPU equivalence test).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import weighting
+
+PyTree = Any
+
+
+def _client_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
+                     method: str = "fedadp"):
+    """Build an aggregation fn over K-stacked deltas.
+
+    delta_pspecs: PartitionSpec tree for the STACKED deltas — leading axis
+    = client axis over ("pod","data"), remaining dims per param sharding.
+
+    Returns agg(deltas, data_sizes, smoothed_prev, count_prev) ->
+      (weighted_delta, theta, theta_smoothed, weights); weighted_delta is
+      sharded like one param tree. smoothed/count are the selected clients'
+      angle-state slots (Eq. 9 is applied inside, matching core.fl).
+    """
+    caxes = _client_axes(mesh)
+    caxis = caxes if len(caxes) > 1 else caxes[0]
+
+    spec_leaves = jax.tree.leaves(delta_pspecs, is_leaf=lambda x: isinstance(x, P))
+    out_specs_leaves = [P(*s[1:]) for s in spec_leaves]  # drop client axis
+
+    def body(deltas, data_sizes, smoothed_prev, count_prev):
+        # deltas: local shard — leaves (K_loc, ...); replicated args full (K,)
+        leaves = jax.tree.leaves(deltas)
+        k_loc = leaves[0].shape[0]
+        idx = jax.lax.axis_index(caxis)  # flattened over (pod, data)
+        my_slots = idx * k_loc + jnp.arange(k_loc)
+
+        psi_avg = weighting.fedavg_weights(data_sizes)
+
+        def wsum(w_full):
+            """psum over clients of w[k] * delta[k] (model shard local)."""
+            w_loc = w_full[my_slots]
+
+            def leaf(x):
+                xf = x.astype(jnp.float32)
+                part = jnp.tensordot(w_loc, xf, axes=1)
+                return jax.lax.psum(part, caxis)
+
+            return jax.tree.map(leaf, deltas)
+
+        g_avg = wsum(psi_avg)  # (1)
+
+        # (2) per-local-client stats, then psum over the non-client axes.
+        # A leaf NOT sharded over some tensor axis is replicated there and
+        # would be counted size(axis) times by that psum — divide each
+        # leaf's contribution by its replication factor first.
+        other_axes = tuple(a for a in mesh.axis_names if a not in caxes)
+
+        def repl_factor(spec):
+            used = set()
+            for entry in tuple(spec)[1:]:
+                if entry is None:
+                    continue
+                for a in (entry if isinstance(entry, tuple) else (entry,)):
+                    used.add(a)
+            f = 1
+            for a in other_axes:
+                if a not in used:
+                    f *= mesh.shape[a]
+            return float(f)
+
+        def stats(x, g, spec):
+            xf = x.astype(jnp.float32)
+            gf = g.astype(jnp.float32)[None]
+            axes_ = tuple(range(1, xf.ndim))
+            inv = 1.0 / repl_factor(spec)
+            return (jnp.sum(xf * gf, axis=axes_) * inv,
+                    jnp.sum(xf * xf, axis=axes_) * inv,
+                    jnp.sum(gf[0] * gf[0]) * inv)
+
+        parts = [stats(x, g, s) for x, g, s in
+                 zip(leaves, jax.tree.leaves(g_avg), spec_leaves)]
+        dot_loc = sum(p[0] for p in parts)
+        sq_loc = sum(p[1] for p in parts)
+        sqg = sum(p[2] for p in parts)
+        if other_axes:
+            dot_loc = jax.lax.psum(dot_loc, other_axes)
+            sq_loc = jax.lax.psum(sq_loc, other_axes)
+            sqg = jax.lax.psum(sqg, other_axes)
+
+        # gather per-client stats to all shards (K,) — O(K) scalars
+        k_total = data_sizes.shape[0]
+        dot_full = jnp.zeros((k_total,), jnp.float32).at[my_slots].set(dot_loc)
+        sq_full = jnp.zeros((k_total,), jnp.float32).at[my_slots].set(sq_loc)
+        dot_full = jax.lax.psum(dot_full, caxis)
+        sq_full = jax.lax.psum(sq_full, caxis)
+
+        theta = weighting.instantaneous_angle(dot_full, sq_full, sqg)  # (3)
+        cnt = count_prev.astype(jnp.float32) + 1.0
+        theta_sm = ((cnt - 1.0) * smoothed_prev + theta) / cnt  # Eq. 9
+        if method == "fedadp":
+            w = weighting.fedadp_weights(theta_sm, data_sizes, alpha)
+        else:
+            w = psi_avg
+        return wsum(w), theta, theta_sm, w  # (4)
+
+    tree_of = lambda leaves: jax.tree.unflatten(
+        jax.tree.structure(delta_pspecs, is_leaf=lambda x: isinstance(x, P)),
+        leaves,
+    )
+    in_specs = (tree_of(spec_leaves), P(), P(), P())
+    out_specs = (tree_of(out_specs_leaves), P(), P(), P())
+    try:
+        smap = jax.shard_map
+    except AttributeError:  # older jax
+        from jax.experimental.shard_map import shard_map as smap
+    return smap(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=False)

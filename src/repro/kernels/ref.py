@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grad_dot_stats(a: jax.Array, b: jax.Array):
+    af = a.reshape(-1).astype(jnp.float32)
+    bf = b.reshape(-1).astype(jnp.float32)
+    return jnp.dot(af, bf), jnp.dot(af, af), jnp.dot(bf, bf)
+
+
+def weighted_agg(w: jax.Array, x: jax.Array):
+    return jnp.sum(
+        w.astype(jnp.float32)[:, None] * x.astype(jnp.float32), axis=0
+    ).astype(x.dtype)
+
+
+def batched_dot(x: jax.Array, g: jax.Array):
+    return x.astype(jnp.float32) @ g.astype(jnp.float32)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True):
+    """Naive softmax attention oracle. q/k/v (BH, T, d)."""
+    T = q.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(T)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)

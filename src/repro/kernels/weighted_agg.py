@@ -1,0 +1,89 @@
+"""Fused K-way weighted delta aggregation Pallas kernel (TPU target).
+
+FedAdp's global update is y = sum_k w_k * x_k over K client deltas
+(Eq. 4/11). A naive implementation is K scaled-add passes (K reads of y);
+this kernel streams each (K, ROWS, 128) tile through VMEM once and writes
+y once — a single HBM pass over the stacked deltas.
+
+Also provides `batched_dot`: u_k = <x_k, g> for all K clients in one pass
+(the per-client angle numerators), sharing the same tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+ROWS = 128  # per-client block: 128*128*4 B = 64 KiB; K<=32 -> <=2 MiB VMEM
+
+
+def _agg_kernel(w_ref, x_ref, y_ref):
+    w = w_ref[...].astype(jnp.float32)  # (K, 1)
+    x = x_ref[...].astype(jnp.float32)  # (K, ROWS, LANE)
+    y_ref[...] = jnp.sum(w[:, :, None] * x, axis=0).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_agg(w: jax.Array, x: jax.Array, *, interpret: bool = True):
+    """y[n] = sum_k w[k] x[k, n]. x: (K, N) any float dtype; f32 accumulate."""
+    K, n = x.shape
+    block = ROWS * LANE
+    pad = (-n) % block
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((K, pad), x.dtype)], axis=1)
+    m = x.shape[1] // LANE
+    x3 = x.reshape(K, m, LANE)
+    w2 = w.reshape(K, 1).astype(jnp.float32)
+
+    y = pl.pallas_call(
+        _agg_kernel,
+        grid=(m // ROWS,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, ROWS, LANE), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, LANE), x.dtype),
+        interpret=interpret,
+    )(w2, x3)
+    return y.reshape(-1)[:n]
+
+
+def _bdot_kernel(x_ref, g_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (K, ROWS, LANE)
+    g = g_ref[...].astype(jnp.float32)  # (ROWS, LANE)
+    out_ref[...] += jnp.sum(x * g[None], axis=(1, 2))[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_dot(x: jax.Array, g: jax.Array, *, interpret: bool = True):
+    """u[k] = <x[k], g>. x: (K, N), g: (N,)."""
+    K, n = x.shape
+    block = ROWS * LANE
+    pad = (-n) % block
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((K, pad), x.dtype)], axis=1)
+        g = jnp.concatenate([g, jnp.zeros((pad,), g.dtype)])
+    m = x.shape[1] // LANE
+    x3 = x.reshape(K, m, LANE)
+    g2 = g.reshape(m, LANE)
+
+    out = pl.pallas_call(
+        _bdot_kernel,
+        grid=(m // ROWS,),
+        in_specs=[
+            pl.BlockSpec((K, ROWS, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((ROWS, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((K, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, 1), jnp.float32),
+        interpret=interpret,
+    )(x3, g2)
+    return out[:, 0]

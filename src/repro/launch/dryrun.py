@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices. Smoke
+tests and benches do NOT import this module — they see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+
+Per combo this prints/records compiled.memory_analysis() (fits-per-device
+proof), compiled.cost_analysis() (FLOPs/bytes for the roofline), and the
+collective-bytes histogram parsed from the per-device HLO.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import shapes as shapes_mod  # noqa: E402
+from repro.configs.registry import ARCHS  # noqa: E402
+from repro.launch import hlo as hlo_mod  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            verbose: bool = True, tag: str = "baseline", **kw) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, in_shard, out_shard, meta = steps.build_step(arch, shape_name, mesh, **kw)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_shard,
+                          out_shardings=out_shard).lower(*args)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = hlo_mod.collective_bytes(text)
+    # loop-aware per-device analysis (XLA cost_analysis counts while bodies
+    # once — see hlo_scoped docstring)
+    from repro.launch import hlo_scoped
+
+    scoped = hlo_scoped.analyze(text)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "tag": tag,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(mesh.devices.size),
+        "meta": meta,
+        "compile_s": round(t1 - t0, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "collectives": coll,
+        "scoped": {
+            "flops": scoped["flops"],
+            "hbm_bytes": scoped["hbm_bytes"],
+            "collectives": scoped["collectives"],
+            "unknown_trip_loops": scoped["unknown_trip_loops"],
+        },
+    }
+    if verbose:
+        m = rec["memory"]
+        per_dev = (m["argument_bytes"] + m["output_bytes"] + m["temp_bytes"]
+                   - m["alias_bytes"])
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] compile {rec['compile_s']}s")
+        print(f"  memory_analysis: args={m['argument_bytes']/2**30:.2f}GiB "
+              f"out={m['output_bytes']/2**30:.2f}GiB temp={m['temp_bytes']/2**30:.2f}GiB "
+              f"(~{per_dev/2**30:.2f}GiB/device live)")
+        print(f"  cost_analysis: flops={rec['flops']:.3e} "
+              f"bytes={rec['bytes_accessed']:.3e} (loop bodies counted once)")
+        s = rec["scoped"]
+        print(f"  scoped (loop-aware): flops={s['flops']:.3e} "
+              f"hbm={s['hbm_bytes']:.3e} "
+              f"coll={s['collectives'].get('total', 0)/2**20:.1f}MiB "
+              f"unknown_loops={s['unknown_trip_loops']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(shapes_mod.SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="sweep all arch x shape")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    ap.add_argument("--method", default="fedadp", choices=["fedadp", "fedavg"])
+    ap.add_argument("--stale", action="store_true",
+                    help="sequential engine: one-pass stale angles")
+    ap.add_argument("--q-chunk", type=int, default=0,
+                    help="query-blocked attention chunk (perf iterations)")
+    ap.add_argument("--mqa-replicate-kv", action="store_true",
+                    help="replicate k/v projections when kv_heads < model axis")
+    ap.add_argument("--ssm-unroll", type=int, default=0,
+                    help="mamba scan unroll factor (perf iterations)")
+    ap.add_argument("--loss-chunk", type=int, default=0,
+                    help="chunked unembed+CE over tokens (perf iterations)")
+    ap.add_argument("--rs-grads", action="store_true",
+                    help="sequential: constrain grads to FSDP spec (RS not AR)")
+    ap.add_argument("--ssm-stream-bf16", action="store_true",
+                    help="mamba scan xs streams in bf16 (perf iterations)")
+    ap.add_argument("--act-constrain", action="store_true",
+                    help="in-model activation sharding constraints")
+    ap.add_argument("--moe-combine-bf16", action="store_true",
+                    help="MoE combine-scatter accumulates in bf16")
+    ap.add_argument("--angle-filter", default="all", choices=["all", "dense_only"])
+    ap.add_argument("--tag", default="baseline",
+                    help="record tag for perf-iteration bookkeeping")
+    args = ap.parse_args()
+
+    combos = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(shapes_mod.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                combos.append((a, s, m))
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                if line.strip():
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("tag", "baseline")))
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+
+    records, failures = [], []
+    for a, s, m in combos:
+        mesh_name = "2x16x16" if m else "16x16"
+        if (a, s, mesh_name, args.tag) in done:
+            print(f"[skip cached] {a} x {s} x {mesh_name}", flush=True)
+            continue
+        try:
+            kw = {}
+            if shapes_mod.SHAPES[s].kind == "train":
+                kw = {"method": args.method, "stale": args.stale,
+                      "angle_filter": args.angle_filter}
+                if args.mqa_replicate_kv:
+                    kw["mqa_replicate_kv"] = True
+                if args.ssm_unroll:
+                    kw["ssm_unroll"] = args.ssm_unroll
+                if args.loss_chunk:
+                    kw["loss_chunk"] = args.loss_chunk
+                if args.rs_grads:
+                    kw["rs_grads"] = True
+                if args.ssm_stream_bf16:
+                    kw["ssm_stream_bf16"] = True
+                if args.act_constrain:
+                    kw["act_constrain"] = True
+                if args.moe_combine_bf16:
+                    kw["moe_combine_bf16"] = True
+            if args.q_chunk and shapes_mod.SHAPES[s].kind != "decode":
+                kw["q_chunk"] = args.q_chunk
+            rec = run_one(a, s, multi_pod=m, tag=args.tag, **kw)
+            records.append(rec)
+            if args.out:  # stream: every record lands immediately
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+        except Exception as e:  # noqa: BLE001 — sweep must report all failures
+            traceback.print_exc()
+            failures.append({"arch": a, "shape": s, "multi_pod": m, "error": str(e)})
+        import sys
+        sys.stdout.flush()
+    print(f"\ndry-run: {len(records)} ok, {len(failures)} failed")
+    for f in failures:
+        print("  FAIL", f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+`compiled.cost_analysis()` has no collective-bytes entry, so we parse the
+(post-SPMD, per-device) HLO and sum the *result* sizes of every collective
+op — the standard napkin model for bytes crossing the ICI per device
+(all-reduce moves ~2x its size ring-wise; we report the raw result bytes
+and note the convention in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective result-byte totals from a (per-device) HLO module.
+
+    Returns {"all-reduce": bytes, ..., "total": bytes, "count": n_ops}.
+    '-done' halves of async pairs are skipped to avoid double counting.
+    """
+    out: dict = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if f"{m.group(2)}-done(" in line:
+            continue
+        result_part = m.group(1)
+        b = _shape_bytes(result_part)
+        out[m.group(2)] += b
+        count += 1
+    out["total"] = sum(out[c] for c in COLLECTIVES if c in out)
+    out["count"] = count
+    return dict(out)
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "custom-call", "scatter",
+                                     "gather", "convolution")) -> dict:
+    hist: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for op in ops:
+            if f" = {op}(" in line or re.search(rf"=\s*[a-z0-9\[\],{{}} ]*\s{op}\(", line):
+                hist[op] += 1
+    return dict(hist)

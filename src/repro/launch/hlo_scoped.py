@@ -1,0 +1,300 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE (verified:
+a 10-step scanned matmul reports 1/10th the unrolled FLOPs), so any model
+lowered as `lax.scan` over layers/clients is massively under-counted. This
+module re-derives the three roofline quantities by walking the optimized
+per-device HLO text with loop-trip multipliers:
+
+  * flops        — 2*M*N*K per dot (from operand/result shapes), scaled by
+                   the product of enclosing while-loop trip counts;
+  * hbm_bytes    — sum over fusion/standalone op boundaries of operand +
+                   result bytes (fusion internals live in VMEM/registers,
+                   so fusion boundaries model HBM traffic on TPU);
+  * collectives  — result bytes per collective op, trip-scaled.
+
+Trip counts come from the canonical counted-loop pattern XLA emits for
+scans: the condition computation compares the induction variable with an
+integer constant. Loops whose trip count cannot be inferred get
+multiplier 1 and are reported in `unknown_trip_loops`.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# computation headers have nested parens in the param list, so only anchor
+# on "name (" ... "{" at end of line
+_COMP_HDR = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                        r"(?:%([\w.\-]+)|\{([^}]*)\})")
+
+COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+
+def _shape_list(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+            out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, shape in _shape_list(type_str):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class _Op:
+    __slots__ = ("name", "type_str", "opcode", "rest", "operands", "calls")
+
+    def __init__(self, name, type_str, opcode, rest):
+        self.name = name
+        self.type_str = type_str
+        self.opcode = opcode
+        self.rest = rest
+        self.operands = []
+        self.calls = []
+
+
+def parse_module(text: str) -> dict:
+    """-> {comp_name: [Op]}; first ENTRY computation under key '__entry__'."""
+    comps: dict = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if line.rstrip().endswith("{") and "(" in line and "=" not in line.split("(")[0]:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        op = _Op(m.group(1), m.group(2), m.group(3), m.group(4))
+        # operand list: up to first "), " attribute break
+        paren = m.group(4)
+        depth = 1
+        end = len(paren)
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        op.operands = _OPERAND.findall(paren[:end])
+        for g1, g2 in _CALL_ATTR.findall(line):
+            if g1:
+                op.calls.append(g1)
+            elif g2:
+                op.calls.extend(_OPERAND.findall(g2))
+        comps[cur].append(op)
+    comps["__entry__"] = entry
+    return comps
+
+
+def _dot_flops(op: _Op, shapes: dict) -> float:
+    """2 * prod(result dims) * contraction size for dot ops."""
+    res = _shape_list(op.type_str)
+    if not res:
+        return 0.0
+    out_n = 1
+    for d in res[0][1]:
+        out_n *= d
+    # contraction size: lhs elements / (batch+free dims present in result)
+    lhs = shapes.get(op.operands[0]) if op.operands else None
+    if lhs is None:
+        return 0.0
+    lhs_n = 1
+    for d in lhs:
+        lhs_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if not m:
+        return 2.0 * out_n  # unknown — lower bound
+    k = 1
+    for d in m.group(1).split(","):
+        if d:
+            k *= lhs[int(d)]
+    return 2.0 * out_n * k
+
+
+def _trip_count(comps: dict, cond_name: str) -> int | None:
+    """Trip count from a counted-loop condition.
+
+    XLA often wraps the compare in a kLoop fusion, so the robust signal is
+    the integer constant living in the condition computation itself (scan
+    emits exactly one: the trip bound). Falls back to constants in called
+    computations."""
+    def int_consts(name):
+        out = []
+        for op in comps.get(name, []):
+            if op.opcode == "constant" and op.type_str.startswith("s"):
+                m = re.match(r"\s*(-?\d+)\s*\)", op.rest)
+                if m:
+                    out.append(int(m.group(1)))
+        return out
+
+    consts = int_consts(cond_name)
+    if not consts:
+        for op in comps.get(cond_name, []):
+            for c in op.calls:
+                consts += int_consts(c)
+    pos = [c for c in consts if c > 0]
+    return max(pos) if pos else None
+
+
+def analyze(text: str) -> dict:
+    """Loop-aware (flops, hbm_bytes, collective bytes) for one HLO module."""
+    comps = parse_module(text)
+    entry = comps.pop("__entry__")
+    shapes: dict = {}
+    for ops in comps.values():
+        for op in ops:
+            res = _shape_list(op.type_str)
+            shapes[op.name] = res[0][1] if len(res) == 1 else None
+            if op.opcode == "parameter":
+                shapes[op.name] = res[0][1] if res else None
+
+    unknown_loops = []
+    memo: dict = {}
+
+    def cost_of(comp: str, depth: int = 0) -> dict:
+        if comp in memo:
+            return memo[comp]
+        if depth > 64 or comp not in comps:
+            return {"flops": 0.0, "hbm": 0.0, "coll": defaultdict(float), "coll_n": 0}
+        total = {"flops": 0.0, "hbm": 0.0, "coll": defaultdict(float), "coll_n": 0}
+        for op in comps[comp]:
+            oc = op.opcode
+            if oc == "while":
+                body, cond = None, None
+                m = re.search(r"body=%?([\w.\-]+)", op.rest)
+                if m:
+                    body = m.group(1)
+                m = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                if m:
+                    cond = m.group(1)
+                trips = _trip_count(comps, cond) if cond else None
+                if trips is None:
+                    trips = 1
+                    unknown_loops.append(op.name)
+                sub = cost_of(body, depth + 1) if body else None
+                if sub:
+                    total["flops"] += trips * sub["flops"]
+                    total["hbm"] += trips * sub["hbm"]
+                    total["coll_n"] += trips * sub["coll_n"]
+                    for k, v in sub["coll"].items():
+                        total["coll"][k] += trips * v
+                continue
+            if oc in ("call", "conditional", "async-start"):
+                for c in op.calls:
+                    sub = cost_of(c, depth + 1)
+                    total["flops"] += sub["flops"]
+                    total["hbm"] += sub["hbm"]
+                    total["coll_n"] += sub["coll_n"]
+                    for k, v in sub["coll"].items():
+                        total["coll"][k] += v
+                continue
+            base = oc.replace("-start", "")
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                if oc.endswith("-done"):
+                    continue
+                total["coll"][base] += _nbytes(op.type_str)
+                total["coll_n"] += 1
+                total["hbm"] += _nbytes(op.type_str)
+                continue
+            if oc == "fusion":
+                # fusion boundary = HBM traffic; count dots inside the fused
+                # computation for flops
+                total["hbm"] += _nbytes(op.type_str)
+                for o in op.operands:
+                    if o in shapes and shapes[o] is not None:
+                        n = 1
+                        for d in shapes[o]:
+                            n *= d
+                        # dtype unknown from operand name; approximate via
+                        # the def's type string when available
+                total["hbm"] += sum(
+                    _op_bytes_by_name(comps, comp, o, shapes) for o in op.operands
+                )
+                for c in op.calls:
+                    sub = cost_of(c, depth + 1)
+                    total["flops"] += sub["flops"]
+                continue
+            if oc in ("dot", "convolution"):
+                total["flops"] += _dot_flops(op, shapes)
+                total["hbm"] += _nbytes(op.type_str)
+                total["hbm"] += sum(
+                    _op_bytes_by_name(comps, comp, o, shapes) for o in op.operands
+                )
+                continue
+            if oc in ("copy", "copy-start", "transpose", "reshape", "bitcast",
+                      "parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast-convert"):
+                continue
+            # other standalone ops at computation scope: count result bytes
+            total["hbm"] += _nbytes(op.type_str)
+        memo[comp] = total
+        return total
+
+    _type_cache.clear()
+    out = cost_of(entry) if entry else {"flops": 0.0, "hbm": 0.0,
+                                        "coll": defaultdict(float), "coll_n": 0}
+    coll = dict(out["coll"])
+    coll["total"] = sum(coll.values())
+    coll["count"] = out["coll_n"]
+    return {
+        "flops": out["flops"],
+        "hbm_bytes": out["hbm"],
+        "collectives": coll,
+        "unknown_trip_loops": len(unknown_loops),
+    }
+
+
+_type_cache: dict = {}
+
+
+def _op_bytes_by_name(comps, comp, name, shapes) -> int:
+    key = (comp, name)
+    if key in _type_cache:
+        return _type_cache[key]
+    b = 0
+    for op in comps.get(comp, []):
+        if op.name == name:
+            b = _nbytes(op.type_str)
+            break
+    _type_cache[key] = b
+    return b

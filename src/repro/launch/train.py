@@ -1,0 +1,97 @@
+"""Production federated-training launcher.
+
+On a real TPU pod this runs the same compiled round the dry-run lowers,
+over the production mesh; on this CPU container use --host-mesh with a
+reduced (smoke) arch to execute end-to-end.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --host-mesh \
+      --smoke --rounds 5
+  # pod usage (unchanged code path):
+  python -m repro.launch.train --arch gemma-2b --rounds 1000 [--multi-pod]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--method", choices=["fedadp", "fedavg"], default="fedadp")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--host-mesh", action="store_true",
+                    help="1-device mesh (CPU execution)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--stale", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import registry, shapes as shapes_mod
+    from repro.core.weighting import AngleState
+    from repro.data import synthetic
+    from repro.launch import steps
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models import transformer
+
+    name = args.arch + ("-smoke" if args.smoke else "")
+    cfg = registry.get(name)
+    mesh = make_host_mesh() if args.host_mesh else make_production_mesh(
+        multi_pod=args.multi_pod)
+    shape = shapes_mod.SHAPES["train_4k"]
+    if args.seq or args.global_batch:
+        shape = dataclasses.replace(
+            shape, seq_len=args.seq or shape.seq_len,
+            global_batch=args.global_batch or shape.global_batch,
+        )
+
+    fn, sds, in_shard, out_shard, meta = steps.build_train_step(
+        cfg, mesh, shape, method=args.method, stale=args.stale,
+        local_steps=args.tau,
+    )
+    K, B, tau = meta["K"], meta["B"], meta["tau"]
+    print(f"arch={cfg.name} mode={meta['fl_mode']} K={K} B={B} tau={tau} "
+          f"T={shape.seq_len} mesh={dict(mesh.shape)}")
+
+    with mesh:
+        step = jax.jit(fn, in_shardings=in_shard, out_shardings=out_shard)
+        params = transformer.init_params(jax.random.key(0), cfg)
+        params = jax.device_put(params, in_shard[0])
+        state = AngleState.init(K)
+        prev = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        sel = jnp.arange(K, dtype=jnp.int32)
+        sizes = jnp.ones((K,))
+        for r in range(args.rounds):
+            toks = synthetic.lm_token_batches(
+                seed=r, num_clients=K, batch=tau * B, seq=shape.seq_len,
+                vocab=cfg.vocab_size,
+            ).reshape(K, tau, B, shape.seq_len)
+            batch = {"tokens": jnp.asarray(toks)}
+            for k2, spec in sds[3].items():
+                if k2 != "tokens":
+                    batch[k2] = jnp.zeros(spec.shape, spec.dtype)
+            t0 = time.time()
+            params, state, prev, m = step(params, state, prev, batch, sel,
+                                          sizes, jnp.int32(r))
+            print(f"round {r:4d} loss {float(m['loss']):.4f} "
+                  f"div {float(m['divergence']):.3f} ({time.time()-t0:.1f}s)")
+        if args.ckpt:
+            from repro.checkpoint import io as ckpt_io
+
+            ckpt_io.save(args.ckpt, {"params": params})
+            print("checkpoint ->", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Mamba-1 selective SSM block (arXiv:2312.00752), as used by Jamba
+(arXiv:2403.19887).
+
+The selective scan keeps Mamba-1's full (d_inner × d_state) data-dependent
+decay, so it is advanced with a `lax.scan` over time (the separable chunked
+trick used for RWKV-6 does not apply when the decay varies per (channel,
+state) pair — see DESIGN.md §3). State math in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def mamba_init(key, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = d_inner(cfg)
+    dtr = _dt_rank(cfg)
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = np.tile(np.arange(1, s.d_state + 1, dtype=np.float32), (di, 1))
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, 1, di), jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": layers.dense_init(ks[2], di, dtr + 2 * s.d_state, dt),
+        "dt_w": layers.dense_init(ks[3], dtr, di, dt),
+        "dt_b": jnp.full((di,), np.log(np.expm1(0.01)), jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.asarray(np.log(A)),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], di, d, dt),
+    }
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, b: jax.Array, buf=None):
+    """Depthwise causal conv. x (B,T,di); w (K,1,di). buf (B,K-1,di) decode
+    prefix or None (zero history). Returns (y, new_buf)."""
+    K = w.shape[0]
+    prefix = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype) if buf is None else buf
+    xp = jnp.concatenate([prefix, x], axis=1)
+    y = jax.lax.conv_general_dilated(
+        xp, w, window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[2],
+    )
+    return y + b, xp[:, -(K - 1):]
+
+
+def _ssm_params(p, cfg, x_c):
+    """x_c (B,T,di) -> dt (B,T,di), Bm/Cm (B,T,n) in f32."""
+    s = cfg.ssm
+    dtr = _dt_rank(cfg)
+    proj = (x_c @ p["x_proj"]).astype(jnp.float32)
+    dt_in, Bm, Cm = jnp.split(proj, [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_w"].astype(jnp.float32) + p["dt_b"])
+    return dt, Bm, Cm
+
+
+def mamba_forward(p: dict, cfg, x: jax.Array, state: dict | None):
+    """x (B,T,d). state: None or {"h": (B,di,n), "conv": (B,K-1,di)}.
+
+    Returns (y (B,T,d), new_state).
+    """
+    di = d_inner(cfg)
+    xz = x @ p["in_proj"]
+    x_in, z = xz[..., :di], xz[..., di:]
+    buf = None if state is None else state["conv"]
+    x_c, new_buf = _conv_causal(x_in, p["conv_w"], p["conv_b"], buf)
+    x_c = jax.nn.silu(x_c)
+
+    dt, Bm, Cm = _ssm_params(p, cfg, x_c)
+    A = -jnp.exp(p["A_log"])  # (di, n)
+    h0 = (
+        jnp.zeros((x.shape[0], di, cfg.ssm.d_state), jnp.float32)
+        if state is None
+        else state["h"].astype(jnp.float32)
+    )
+    xcf = x_c.astype(jnp.float32)
+
+    def one(h, x_t, dt_t, B_t, C_t):
+        x_t = x_t.astype(jnp.float32)
+        dt_t = dt_t.astype(jnp.float32)
+        B_t = B_t.astype(jnp.float32)
+        C_t = C_t.astype(jnp.float32)
+        decay = jnp.exp(dt_t[..., None] * A[None])  # (B,di,n)
+        h = decay * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        return h, jnp.einsum("bdn,bn->bd", h, C_t)
+
+    # stream-dtype option: x/B/C streams may be stored bf16 (they carry the
+    # model's native activation precision); dt stays f32 — its error
+    # compounds through exp(dt*A) decay products over the whole sequence.
+    sdt = jnp.dtype(cfg.ssm.stream_dtype)
+    xcf, Bm, Cm = (t.astype(sdt) for t in (xcf, Bm, Cm))
+    T = x.shape[1]
+    u = cfg.ssm.scan_unroll if (cfg.ssm.scan_unroll > 1
+                                and T % cfg.ssm.scan_unroll == 0) else 1
+    if u == 1:
+        def step(h, xs):
+            x_t, dt_t, B_t, C_t = xs
+            return one(h, x_t, dt_t, B_t, C_t)
+
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xcf, dt, Bm, Cm))
+        h_fin, ys = jax.lax.scan(step, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1) + p["D"] * xcf  # (B,T,di)
+    else:
+        # unrolled chunks: the carry stays on-chip for u steps per scan
+        # iteration -> ~u x less HBM state traffic (see SSMConfig.scan_unroll)
+        def chunk(h, xs):
+            xc, dtc, Bc, Cc = xs  # (u, B, ...)
+            ys = []
+            for i in range(u):
+                h, y_t = one(h, xc[i], dtc[i], Bc[i], Cc[i])
+                ys.append(y_t)
+            return h, jnp.stack(ys)
+
+        def chunkify(t):
+            tt = jnp.moveaxis(t, 1, 0)  # (T, B, ...)
+            return tt.reshape(T // u, u, *tt.shape[1:])
+
+        xs = tuple(chunkify(t) for t in (xcf, dt, Bm, Cm))
+        h_fin, ys = jax.lax.scan(chunk, h0, xs)
+        y = jnp.moveaxis(ys.reshape(T, *ys.shape[2:]), 0, 1) + p["D"] * xcf
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return y, {"h": h_fin, "conv": new_buf}
+
+
+def init_state(cfg, B: int) -> dict:
+    return {
+        "h": jnp.zeros((B, d_inner(cfg), cfg.ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((B, cfg.ssm.d_conv - 1, d_inner(cfg)), cfg.jdtype),
+    }

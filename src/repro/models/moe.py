@@ -1,0 +1,89 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2 style: shared + routed, top-k).
+
+Dispatch is sort-based with a fixed per-expert capacity (drop-on-overflow),
+so compiled FLOPs track *activated* parameters (E·C ≈ tokens·top_k·cap):
+tokens are argsorted by expert id, packed into an (E, C, d) buffer, run
+through a stacked-expert grouped matmul, and combined back with their gate
+weights. Expert weights are stacked on a leading E axis so the tensor-
+parallel mesh axis shards *experts* (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def moe_init(key, cfg) -> dict:
+    m = cfg.moe
+    d, dt = cfg.d_model, cfg.jdtype
+    kr, ke, ks = jax.random.split(key, 3)
+    ek = jax.random.split(ke, 3)
+    E, f = m.num_experts, m.d_ff_expert
+
+    def stacked(k, a, b):
+        kk = jax.random.split(k, E)
+        return jax.vmap(lambda q: layers.dense_init(q, a, b, dt))(kk)
+
+    p = {
+        "router": layers.dense_init(kr, d, E, jnp.float32),
+        "w_gate": stacked(ek[0], d, f),
+        "w_up": stacked(ek[1], d, f),
+        "w_down": stacked(ek[2], f, d),
+    }
+    if m.num_shared:
+        p["shared"] = layers.mlp_init(ks, d, m.num_shared * f, "swiglu", dt)
+    return p
+
+
+def _capacity(num_tokens: int, m) -> int:
+    c = int(num_tokens * m.top_k * m.capacity_factor / m.num_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(p: dict, cfg, x: jax.Array):
+    """x (B, T, d) -> (y, aux_loss). Also handles (B, 1, d) decode."""
+    m = cfg.moe
+    B, T, d = x.shape
+    N = B * T
+    xf = x.reshape(N, d)
+
+    logits = (xf.astype(jnp.float32)) @ p["router"]  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, m.top_k)  # (N, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    C = _capacity(N, m)
+    E = m.num_experts
+    flat_e = eidx.reshape(-1)  # (N*k,)
+    flat_tok = jnp.repeat(jnp.arange(N), m.top_k)
+    flat_gate = gates.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, stok, sgate = flat_e[order], flat_tok[order], flat_gate[order]
+    pos_in_e = jnp.arange(N * m.top_k) - jnp.searchsorted(se, se, side="left")
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)  # overflow row dropped
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(xf[stok])
+    h = buf[: E * C].reshape(E, C, d)
+    # grouped swiglu over stacked experts
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"]).reshape(E * C, d)
+    ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], axis=0)
+
+    contrib = ye[slot] * (sgate * keep).astype(ye.dtype)[:, None]
+    acc_dt = jnp.dtype(m.combine_dtype)
+    y = jnp.zeros((N, d), acc_dt).at[stok].add(contrib.astype(acc_dt))
+    y = y.astype(x.dtype)
+
+    if "shared" in p:
+        y = y + layers.mlp_apply(p["shared"], xf, "swiglu")
+
+    # switch-style load-balance loss over all k assignments
+    f_e = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0) / (N * m.top_k)
+    p_e = jnp.mean(probs, axis=0)
+    aux = m.aux_loss_weight * E * jnp.sum(f_e * p_e)
+    return y.reshape(B, T, d), aux

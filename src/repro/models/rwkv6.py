@@ -1,0 +1,198 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention
+(arXiv:2404.05892), TPU-adapted.
+
+TPU adaptation (see DESIGN.md §3): instead of a length-T scalar recurrence,
+the WKV state is advanced in chunks of `chunk_len`; intra-chunk interactions
+become (L×L) matmuls (MXU-friendly) and the state crosses chunk boundaries
+through a `lax.scan`. Numerics: with per-channel decay w ∈ (0,1) the chunked
+form needs exp(±cumsum(log w)); we clamp the per-step log-decay to
+[-40/chunk_len, -1e-6] so every exponent stays within f32 range. All WKV
+math runs in f32.
+
+Simplification vs the full paper: the token-shift interpolation for r/k/v/g
+uses static learned mixes (RWKV-5 style); the *decay* keeps the paper's
+data-dependent LoRA (the headline feature of Finch). Recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def rwkv_init(key, cfg) -> dict:
+    r = cfg.rwkv
+    d = cfg.d_model
+    H = d // r.head_dim
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 12)
+
+    def mix(k):
+        return jax.random.uniform(k, (d,), jnp.float32).astype(dt)
+
+    p = {
+        # time mix
+        "mu_r": mix(ks[0]), "mu_k": mix(ks[1]), "mu_v": mix(ks[2]),
+        "mu_g": mix(ks[3]), "mu_w": mix(ks[4]),
+        "w_r": layers.dense_init(ks[5], d, d, dt),
+        "w_k": layers.dense_init(ks[6], d, d, dt),
+        "w_v": layers.dense_init(ks[7], d, d, dt),
+        "w_g": layers.dense_init(ks[8], d, d, dt),
+        "w_o": layers.dense_init(ks[9], d, d, dt),
+        # data-dependent decay LoRA: logw = -exp(w_base + tanh(x A) B)
+        "decay_a": layers.dense_init(ks[10], d, r.decay_lora, dt),
+        "decay_b": (jax.random.normal(ks[11], (r.decay_lora, d), jnp.float32) * 0.01).astype(dt),
+        "w_base": jnp.zeros((d,), jnp.float32),
+        "u": jnp.zeros((H, r.head_dim), jnp.float32),  # bonus
+        "ln_x_scale": jnp.ones((H, r.head_dim), jnp.float32),
+        "ln_x_bias": jnp.zeros((H, r.head_dim), jnp.float32),
+        # channel mix
+        "cmu_k": mix(ks[0]), "cmu_r": mix(ks[1]),
+        "cw_k": layers.dense_init(ks[5], d, cfg.d_ff, dt),
+        "cw_v": layers.dense_init(ks[6], cfg.d_ff, d, dt),
+        "cw_r": layers.dense_init(ks[7], d, d, dt),
+    }
+    return p
+
+
+def _shift(x: jax.Array, last: jax.Array | None) -> jax.Array:
+    """Token shift: x_{t-1}, with `last` (B, d) as position -1 (zeros if None)."""
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _decay_log(p, xw: jax.Array, chunk_len: int) -> jax.Array:
+    """Per-channel log-decay in [-40/chunk_len, -1e-6]."""
+    lora = jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    logw = -jnp.exp(p["w_base"].astype(jnp.float32) + lora.astype(jnp.float32))
+    return jnp.clip(logw, -40.0 / chunk_len, -1e-6)
+
+
+def _wkv_chunked(r, k, v, logw, u, state):
+    """Chunked WKV. r/k/v/logw: (B, T, H, e) f32; u (H, e); state (B, H, e, e).
+
+    Returns (out (B,T,H,e), final_state). T must divide by the chunk length
+    already baked into the caller's reshape.
+    """
+    B, nC, L, H, e = r.shape
+    mask = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :]).astype(jnp.float32)
+
+    def body(S, xs):
+        rc, kc, vc, lwc = xs  # (B, L, H, e)
+        cw = jnp.cumsum(lwc, axis=1)  # inclusive
+        cwe = cw - lwc  # exclusive: cw_{t-1}
+        r_t = rc * jnp.exp(cwe)
+        k_t = kc * jnp.exp(-cw)
+        scores = jnp.einsum("blhe,bmhe->bhlm", r_t, k_t) * mask[None, None]
+        diag = jnp.einsum("blhe,blhe->bhl", rc, u[None, None] * kc)
+        scores = scores + jnp.einsum("bhl,lm->bhlm", diag, jnp.eye(L))
+        o_intra = jnp.einsum("bhlm,bmhe->blhe", scores, vc)
+        o_inter = jnp.einsum("blhe,bhef->blhf", r_t, S)
+        cw_last = cw[:, -1]  # (B, H, e)
+        k_carry = kc * jnp.exp(cw_last[:, None] - cw)
+        S_new = S * jnp.exp(cw_last)[..., None] + jnp.einsum(
+            "blhe,blhf->bhef", k_carry, vc
+        )
+        return S_new, o_intra + o_inter
+
+    r, k, v, logw = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    final, out = jax.lax.scan(body, state, (r, k, v, logw))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nC * L, H, e)
+    return out, final
+
+
+def time_mix(p, cfg, x, state):
+    """x (B,T,d) normed input; state None (train) or dict (decode prefix).
+
+    Returns (y, new_state_dict).
+    """
+    r_cfg = cfg.rwkv
+    e = r_cfg.head_dim
+    d = cfg.d_model
+    H = d // e
+    B, T, _ = x.shape
+    last = None if state is None else state["tm_last"]
+    xs = _shift(x, last)
+    rr = _lerp(x, xs, p["mu_r"]) @ p["w_r"]
+    kk = _lerp(x, xs, p["mu_k"]) @ p["w_k"]
+    vv = _lerp(x, xs, p["mu_v"]) @ p["w_v"]
+    gg = jax.nn.silu(_lerp(x, xs, p["mu_g"]) @ p["w_g"])
+    logw = _decay_log(p, _lerp(x, xs, p["mu_w"]), r_cfg.chunk_len)
+
+    def heads(t):
+        return t.reshape(B, T, H, e).astype(jnp.float32)
+
+    r4, k4, v4, w4 = heads(rr), heads(kk), heads(vv), heads(logw)
+    S0 = (
+        jnp.zeros((B, H, e, e), jnp.float32)
+        if state is None
+        else state["S"].astype(jnp.float32)
+    )
+    L = r_cfg.chunk_len
+    assert T % L == 0, f"T={T} not divisible by rwkv chunk_len={L}"
+    nC = T // L
+
+    def chunkify(t):
+        return t.reshape(B, nC, L, H, e)
+
+    out, S_fin = _wkv_chunked(
+        chunkify(r4), chunkify(k4), chunkify(v4), chunkify(w4),
+        p["u"].astype(jnp.float32), S0,
+    )
+    out = layers.groupnorm_heads(out, p["ln_x_scale"], p["ln_x_bias"])
+    y = (out.reshape(B, T, d).astype(x.dtype) * gg) @ p["w_o"]
+    new_state = {"S": S_fin, "tm_last": x[:, -1]}
+    return y, new_state
+
+
+def time_mix_decode(p, cfg, x, state):
+    """Single-token recurrent step. x (B,1,d)."""
+    r_cfg = cfg.rwkv
+    e = r_cfg.head_dim
+    d = cfg.d_model
+    H = d // e
+    B = x.shape[0]
+    xs = state["tm_last"][:, None]
+    rr = _lerp(x, xs, p["mu_r"]) @ p["w_r"]
+    kk = _lerp(x, xs, p["mu_k"]) @ p["w_k"]
+    vv = _lerp(x, xs, p["mu_v"]) @ p["w_v"]
+    gg = jax.nn.silu(_lerp(x, xs, p["mu_g"]) @ p["w_g"])
+    logw = _decay_log(p, _lerp(x, xs, p["mu_w"]), r_cfg.chunk_len)
+
+    def heads(t):
+        return t.reshape(B, H, e).astype(jnp.float32)
+
+    r1, k1, v1 = heads(rr[:, 0]), heads(kk[:, 0]), heads(vv[:, 0])
+    w1 = heads(logw[:, 0])
+    S = state["S"].astype(jnp.float32)  # (B,H,e,e)
+    u = p["u"].astype(jnp.float32)
+    wkv = S + (u[None] * k1)[..., None] * v1[..., None, :]
+    o = jnp.einsum("bhe,bhef->bhf", r1, wkv)  # (B,H,e)
+    S_new = S * jnp.exp(w1)[..., None] + k1[..., None] * v1[..., None, :]
+    o = layers.groupnorm_heads(o, p["ln_x_scale"], p["ln_x_bias"])
+    y = (o.reshape(B, 1, d).astype(x.dtype) * gg) @ p["w_o"]
+    return y, {"S": S_new, "tm_last": x[:, -1]}
+
+
+def channel_mix(p, x, last):
+    """RWKV channel mix (relu^2). last: (B,d) or None. Returns (y, new_last)."""
+    xs = _shift(x, last)
+    k = _lerp(x, xs, p["cmu_k"]) @ p["cw_k"]
+    kv = jnp.square(jax.nn.relu(k)) @ p["cw_v"]
+    r = jax.nn.sigmoid(_lerp(x, xs, p["cmu_r"]) @ p["cw_r"])
+    return r * kv, x[:, -1]
+
+
+def init_state(cfg, B: int) -> dict:
+    e = cfg.rwkv.head_dim
+    H = cfg.d_model // e
+    return {
+        "S": jnp.zeros((B, H, e, e), jnp.float32),
+        "tm_last": jnp.zeros((B, cfg.d_model), cfg.jdtype),
+        "cm_last": jnp.zeros((B, cfg.d_model), cfg.jdtype),
+    }

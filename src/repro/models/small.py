@@ -1,0 +1,83 @@
+"""The paper's own evaluation models (Section V):
+
+* MLR — multinomial logistic regression on flattened 28x28 images (convex).
+* CNN — 5x5x32 conv > 2x2 maxpool > 5x5x64 conv > 2x2 maxpool >
+  FC(3136->512) > FC(512->10); 1,663,370 parameters, matching the paper's
+  stated total (its "1024x512" FC is a typo — 7*7*64=3136 inputs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlr_init(key, num_classes: int = 10, side: int = 28) -> dict:
+    d = side * side
+    return {
+        "w": jax.random.normal(key, (d, num_classes), jnp.float32) * 0.01,
+        "b": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def mlr_apply(params: dict, x: jax.Array) -> jax.Array:
+    return x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+
+
+def cnn_init(key, num_classes: int = 10) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def conv(k, kh, kw, cin, cout):
+        scale = 1.0 / jnp.sqrt(kh * kw * cin)
+        return jax.random.normal(k, (kh, kw, cin, cout), jnp.float32) * scale
+
+    def fc(k, a, b):
+        return jax.random.normal(k, (a, b), jnp.float32) / jnp.sqrt(a)
+
+    return {
+        "c1": conv(k1, 5, 5, 1, 32), "b1": jnp.zeros((32,)),
+        "c2": conv(k2, 5, 5, 32, 64), "b2": jnp.zeros((64,)),
+        "f1": fc(k3, 3136, 512), "fb1": jnp.zeros((512,)),
+        "f2": fc(k4, 512, num_classes), "fb2": jnp.zeros((num_classes,)),
+    }
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_apply(params: dict, x: jax.Array) -> jax.Array:
+    """x (B, 28, 28, 1) -> logits (B, 10)."""
+    h = jax.lax.conv_general_dilated(
+        x, params["c1"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ) + params["b1"]
+    h = _maxpool2(jax.nn.relu(h))
+    h = jax.lax.conv_general_dilated(
+        h, params["c2"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ) + params["b2"]
+    h = _maxpool2(jax.nn.relu(h))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["f1"] + params["fb1"])
+    return h @ params["f2"] + params["fb2"]
+
+
+MODELS = {
+    "mlr": (mlr_init, mlr_apply),
+    "cnn": (cnn_init, cnn_apply),
+}
+
+
+def classification_loss(apply_fn, params, x, y):
+    logits = apply_fn(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def accuracy(apply_fn, params, x, y, batch: int = 2048) -> float:
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = apply_fn(params, x[i : i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i : i + batch]))
+    return correct / x.shape[0]

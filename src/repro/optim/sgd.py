@@ -1,0 +1,83 @@
+"""Minimal pure-JAX optimizers (no optax in the container).
+
+An optimizer is (init_fn, update_fn):
+  state = init(params)
+  new_params, new_state = update(params, grads, state, lr)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(params, grads, state, lr):
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads,
+        )
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(params, grads, state, lr):
+        vel = jax.tree.map(lambda v, g: beta * v + g.astype(jnp.float32), state, grads)
+        new = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype), params, vel
+        )
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z), "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree.map(
+            lambda p, mm, vv: (
+                p.astype(jnp.float32) - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            ).astype(p.dtype),
+            params, m, v,
+        )
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def exponential_decay(base_lr: float, rate: float) -> Callable:
+    """Paper's schedule: lr * rate^round (0.995 per communication round)."""
+
+    def schedule(round_idx):
+        return base_lr * rate ** jnp.asarray(round_idx, jnp.float32)
+
+    return schedule
+
+
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adam": adam}

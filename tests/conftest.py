@@ -1,0 +1,15 @@
+import os
+import sys
+
+# tests must see ONE device (the 512-device placeholder is dryrun-only)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import hypothesis
+
+# jit compilation inside hypothesis bodies makes wall-time deadlines noisy
+hypothesis.settings.register_profile(
+    "repro", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("repro")

@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests: reduced same-family variants (<=2 groups,
+d_model<=512, <=4 experts) run one forward/train step and one decode step
+on CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry, shapes
+from repro.models import transformer
+
+ARCHS = sorted(registry.ARCHS)
+
+
+def _batch(cfg, B=2, T=32, seed=0):
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(seed), (B, T), 0, cfg.vocab_size)
+    }
+    if cfg.vision_prefix:
+        batch["vision_embeds"] = (
+            jax.random.normal(jax.random.key(1), (B, cfg.vision_prefix, cfg.d_model))
+            * 0.02
+        ).astype(cfg.jdtype)
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = (
+            jax.random.normal(jax.random.key(2), (B, cfg.encoder_len, cfg.d_model))
+            * 0.02
+        ).astype(cfg.jdtype)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def arch_setup():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = registry.smoke(name)
+            params = transformer.init_params(jax.random.key(0), cfg)
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(arch_setup, name):
+    cfg, params = arch_setup(name)
+    B, T = 2, 32
+    batch = _batch(cfg, B, T)
+    logits, aux, off = transformer.forward(params, cfg, batch, mode="train")
+    assert logits.shape == (B, T + (cfg.vision_prefix or 0), cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_no_nans(arch_setup, name):
+    cfg, params = arch_setup(name)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(transformer.loss_fn)(params, cfg, batch)
+    assert jnp.isfinite(loss)
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn) and gn > 0.0
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_decode_consistency(arch_setup, name):
+    """Greedy decode after prefill must match the full-sequence forward."""
+    cfg, params = arch_setup(name)
+    B, T = 2, 32
+    batch = _batch(cfg, B, T)
+    logits_full, _, off = transformer.forward(params, cfg, batch, mode="train")
+    logits_pre, _, cache = transformer.forward(
+        params, cfg, batch, mode="prefill", max_len=T + 4
+    )
+    assert jnp.allclose(
+        logits_full[:, -1].astype(jnp.float32),
+        logits_pre[:, -1].astype(jnp.float32), atol=2e-2, rtol=2e-2,
+    )
+    tok = jnp.argmax(logits_pre[:, -1:], axis=-1).astype(jnp.int32)
+    extras = {}
+    if cfg.rope_style == "mrope":
+        extras["positions"] = jnp.full((3, B, 1), T + cfg.vision_prefix, jnp.int32)
+    logits_dec, cache2 = transformer.decode_step(
+        params, cfg, tok, cache, jnp.int32(T), extras
+    )
+    assert logits_dec.shape == (B, 1, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits_dec.astype(jnp.float32)))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("name", ["gemma-2b", "rwkv6-3b", "deepseek-v2-lite-16b",
+                                  "jamba-1.5-large-398b"])
+def test_decode_matches_forward_teacher_forcing(arch_setup, name):
+    """Token-by-token decode reproduces the parallel forward logits."""
+    cfg, params = arch_setup(name)
+    B, T = 1, 16
+    batch = _batch(cfg, B, T)
+    logits_full, _, _ = transformer.forward(params, cfg, batch, mode="train")
+    pre = 8
+    pre_batch = dict(batch, tokens=batch["tokens"][:, :pre])
+    _, _, cache = transformer.forward(params, cfg, pre_batch, mode="prefill",
+                                      max_len=T)
+    for t in range(pre, T):
+        tok = batch["tokens"][:, t : t + 1]
+        logits_dec, cache = transformer.decode_step(
+            params, cfg, tok, cache, jnp.int32(t), {}
+        )
+    assert jnp.allclose(
+        logits_dec[:, 0].astype(jnp.float32),
+        logits_full[:, -1].astype(jnp.float32), atol=5e-2, rtol=5e-2,
+    ), name
+
+
+def test_sliding_window_masks_distant_tokens():
+    cfg = registry.smoke("gemma-2b", sliding_window=8)
+    params = transformer.init_params(jax.random.key(0), cfg)
+    b1 = _batch(cfg, 1, 32, seed=3)
+    # perturbing a token outside the window must not change the last logit
+    toks2 = b1["tokens"].at[0, 0].set((b1["tokens"][0, 0] + 7) % cfg.vocab_size)
+    l1, _, _ = transformer.forward(params, cfg, b1, mode="train")
+    l2, _, _ = transformer.forward(params, cfg, {"tokens": toks2}, mode="train")
+    assert jnp.allclose(l1[0, -1], l2[0, -1], atol=1e-5)
+    assert not jnp.allclose(l1[0, 1], l2[0, 1], atol=1e-5)
+
+
+def test_chunked_attention_matches_naive():
+    """q_chunk (the §Perf memory-term optimization) is numerically exact."""
+    import dataclasses
+
+    cfg = registry.smoke("starcoder2-15b")
+    params = transformer.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, 2, 64)
+    l1, _, _ = transformer.forward(params, cfg, batch, mode="train")
+    for window in (0, 24):
+        c2 = dataclasses.replace(cfg, q_chunk=16, sliding_window=window)
+        c1 = dataclasses.replace(cfg, sliding_window=window)
+        a, _, _ = transformer.forward(params, c1, batch, mode="train")
+        b, _, _ = transformer.forward(params, c2, batch, mode="train")
+        assert jnp.allclose(a, b, atol=1e-4, rtol=1e-4)
+    del l1
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_input_specs_build(name):
+    cfg = registry.get(name)
+    for sh in shapes.SHAPES.values():
+        c2 = shapes.config_for_shape(cfg, sh)
+        if sh.kind in ("train", "prefill"):
+            specs = shapes.token_batch_specs(c2, 4, 64)
+            assert specs["tokens"].shape == (4, 64)
+        else:
+            d = shapes.decode_specs(c2, 2, 128)
+            assert d["token"].shape == (2, 1)
+            assert len(jax.tree.leaves(d["cache"])) > 0

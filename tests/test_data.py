@@ -1,0 +1,81 @@
+"""Data-pipeline properties: partition protocols and learnability."""
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def task():
+    return synthetic.make_image_task(seed=0, num_train=8000, num_test=1000)
+
+
+def test_shapes_and_range(task):
+    train, test = task
+    assert train.x.shape == (8000, 28, 28, 1)
+    assert train.x.min() >= 0.0 and train.x.max() <= 1.0
+    assert set(np.unique(train.y)) == set(range(10))
+
+
+def test_xclass_partition_has_x_classes(task):
+    train, _ = task
+    rng = np.random.default_rng(0)
+    for x in (1, 2, 3):
+        node = synthetic.partition_xclass(rng, train, x, 600)
+        assert len(np.unique(node.y)) <= x
+        assert len(node.y) == 600
+
+
+def test_iid_partition_covers_classes(task):
+    train, _ = task
+    node = synthetic.partition_iid(np.random.default_rng(0), train, 600)
+    assert len(np.unique(node.y)) == 10
+
+
+def test_dirichlet_partition_sizes(task):
+    train, _ = task
+    nodes = synthetic.dirichlet_partition(
+        np.random.default_rng(0), train, 5, 0.5, 200
+    )
+    assert len(nodes) == 5
+    assert all(len(n.y) == 200 for n in nodes)
+
+
+def test_centrally_learnable(task):
+    """MLR on pooled data reaches high accuracy — the FL targets are
+    attainable, so rounds-to-target comparisons are meaningful."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import small
+
+    train, test = task
+    params = small.mlr_init(jax.random.key(0))
+
+    @jax.jit
+    def step(p, x, y, lr):
+        g = jax.grad(lambda q: small.classification_loss(small.mlr_apply, q, x, y))(p)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    for e in range(12):
+        for i in range(0, 8000, 128):
+            params = step(params, jnp.asarray(train.x[i:i+128]),
+                          jnp.asarray(train.y[i:i+128]), 0.1)
+    acc = small.accuracy(small.mlr_apply, params, test.x, test.y)
+    assert acc > 0.9, acc
+
+
+def test_lm_tokens_noniid_skew():
+    toks = synthetic.lm_token_batches(0, 4, 8, 64, 100)
+    assert toks.shape == (4, 8, 64)
+    # different clients favour different tokens
+    top = [np.bincount(toks[i].ravel(), minlength=100).argmax() for i in range(4)]
+    assert len(set(top)) > 1
+
+
+def test_batch_iterator_epochs():
+    ds = synthetic.Dataset(np.arange(40, dtype=np.float32).reshape(10, 2, 2, 1),
+                           np.arange(10, dtype=np.int32))
+    it = synthetic.batch_iterator(ds, 3, seed=0)
+    xs, ys = next(it)
+    assert xs.shape == (3, 2, 2, 1) and ys.shape == (3,)

@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import treemath
+from repro.kernels import grad_dot, ops, ref, weighted_agg
+
+SHAPES = [(7,), (128,), (65536,), (1000, 333), (3, 17, 129)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_grad_dot_stats(shape, dtype):
+    a = jax.random.normal(jax.random.key(0), shape, dtype)
+    b = jax.random.normal(jax.random.key(1), shape, dtype)
+    got = grad_dot.grad_dot_stats(a, b)
+    want = ref.grad_dot_stats(a, b)
+    rtol = 1e-3 if dtype == jnp.float32 else 2e-2
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=rtol)
+
+
+@pytest.mark.parametrize("k", [1, 4, 16])
+@pytest.mark.parametrize("n", [100, 16384, 70001])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_weighted_agg(k, n, dtype):
+    x = jax.random.normal(jax.random.key(0), (k, n), dtype)
+    w = jax.random.uniform(jax.random.key(1), (k,), jnp.float32)
+    got = weighted_agg.weighted_agg(w, x)
+    want = ref.weighted_agg(w, x)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=1e-2,
+    )
+
+
+@pytest.mark.parametrize("k", [2, 8])
+@pytest.mark.parametrize("n", [128, 50000])
+def test_batched_dot(k, n):
+    x = jax.random.normal(jax.random.key(0), (k, n), jnp.float32)
+    g = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(weighted_agg.batched_dot(x, g)),
+        np.asarray(ref.batched_dot(x, g)), rtol=1e-3,
+    )
+
+
+def _tree(key, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "a": jax.random.normal(k1, (257, 33), dtype),
+        "b": {"c": jax.random.normal(k2, (1000,), dtype),
+              "d": jax.random.normal(k3, (4, 4, 4), dtype)},
+    }
+
+
+def test_ops_tree_dot_and_norms_matches_treemath():
+    a, b = _tree(jax.random.key(0)), _tree(jax.random.key(1))
+    got = ops.tree_dot_and_norms(a, b)
+    want = treemath.tree_dot_and_norms(a, b)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-3)
+
+
+def test_ops_tree_weighted_sum_matches_treemath():
+    trees = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_tree(jax.random.key(i)) for i in range(4)],
+    )
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+    got = ops.tree_weighted_sum(trees, w)
+    want = treemath.tree_weighted_sum(trees, w)
+    jax.tree.map(
+        lambda g, x: np.testing.assert_allclose(
+            np.asarray(g), np.asarray(x), rtol=1e-3, atol=1e-5
+        ),
+        got, want,
+    )
+
+
+def test_ops_tree_vdot_batched_matches_treemath():
+    trees = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[_tree(jax.random.key(i)) for i in range(3)]
+    )
+    single = _tree(jax.random.key(9))
+    np.testing.assert_allclose(
+        np.asarray(ops.tree_vdot_batched(trees, single)),
+        np.asarray(treemath.tree_vdot_batched(trees, single)), rtol=1e-3,
+    )

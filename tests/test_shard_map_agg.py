@@ -1,0 +1,94 @@
+"""shard_map FedAdp aggregation vs the pjit/treemath path.
+
+The multi-device equivalence check runs in a subprocess (the test session
+itself is pinned to 1 device; the dry-run placeholder-device trick is
+reserved for repro.launch.dryrun).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import fl_shard_map, treemath, weighting
+
+
+def _reference(deltas, sizes, sm_prev, cnt_prev, alpha=5.0):
+    psi = weighting.fedavg_weights(sizes)
+    g_avg = treemath.tree_weighted_sum(deltas, psi)
+    theta = weighting.instantaneous_angle(
+        treemath.tree_vdot_batched(deltas, g_avg),
+        treemath.tree_sqnorm_batched(deltas),
+        treemath.tree_sqnorm(g_avg),
+    )
+    cnt = cnt_prev.astype(jnp.float32) + 1
+    sm = ((cnt - 1) * sm_prev + theta) / cnt
+    w = weighting.fedadp_weights(sm, sizes, alpha)
+    return treemath.tree_weighted_sum(deltas, w), theta, w
+
+
+def test_single_device_mesh_matches_reference():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    K = 4
+    deltas = {
+        "a": jax.random.normal(jax.random.key(0), (K, 8, 6)),
+        "b": jax.random.normal(jax.random.key(1), (K, 16)),
+    }
+    pspecs = {"a": P("data", None, "model"), "b": P("data", None)}
+    sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+    sm_prev = jnp.asarray([0.5, 0.2, 0.9, 0.4])
+    cnt_prev = jnp.asarray([1, 2, 0, 3], jnp.int32)
+    agg = fl_shard_map.fedadp_aggregate(mesh, pspecs, alpha=5.0)
+    with mesh:
+        delta, theta, _, w = jax.jit(agg)(deltas, sizes, sm_prev, cnt_prev)
+    dref, tref, wref = _reference(deltas, sizes, sm_prev, cnt_prev)
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(tref), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wref), rtol=1e-5)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                                rtol=1e-4, atol=1e-6),
+        delta, dref,
+    )
+
+
+def test_multi_device_mesh_matches_reference_subprocess():
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core import fl_shard_map, treemath, weighting
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        K = 4
+        deltas = {"a": jax.random.normal(jax.random.key(0), (K, 8, 6)),
+                  "b": jax.random.normal(jax.random.key(1), (K, 16))}
+        pspecs = {"a": P("data", None, "model"), "b": P("data", None)}
+        sizes = jnp.asarray([10., 20., 30., 40.])
+        sm = jnp.asarray([.5, .2, .9, .4]); cnt = jnp.asarray([1,2,0,3], jnp.int32)
+        agg = fl_shard_map.fedadp_aggregate(mesh, pspecs, alpha=5.0)
+        with mesh:
+            delta, theta, _, w = jax.jit(agg)(deltas, sizes, sm, cnt)
+        psi = weighting.fedavg_weights(sizes)
+        g = treemath.tree_weighted_sum(deltas, psi)
+        tref = weighting.instantaneous_angle(
+            treemath.tree_vdot_batched(deltas, g),
+            treemath.tree_sqnorm_batched(deltas), treemath.tree_sqnorm(g))
+        c = cnt.astype(jnp.float32)+1
+        wref = weighting.fedadp_weights(((c-1)*sm + tref)/c, sizes, 5.0)
+        dref = treemath.tree_weighted_sum(deltas, wref)
+        np.testing.assert_allclose(np.asarray(theta), np.asarray(tref), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(wref), rtol=1e-5)
+        jax.tree.map(lambda a,b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6), delta, dref)
+        print("SHARD_MAP_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "SHARD_MAP_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,72 @@
+"""treemath vs numpy ground truth, incl. hypothesis property checks."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import treemath
+
+
+def _np_flat(tree):
+    return np.concatenate([np.asarray(x, np.float64).ravel()
+                           for x in jax.tree.leaves(tree)])
+
+
+def _rand_tree(seed, dtype=jnp.float32):
+    k = jax.random.split(jax.random.key(seed), 3)
+    return {"x": jax.random.normal(k[0], (37, 11), dtype),
+            "y": [jax.random.normal(k[1], (5,), dtype),
+                  jax.random.normal(k[2], (2, 3, 4), dtype)]}
+
+
+def test_dot_and_norms():
+    a, b = _rand_tree(0), _rand_tree(1)
+    d, na, nb = treemath.tree_dot_and_norms(a, b)
+    fa, fb = _np_flat(a), _np_flat(b)
+    np.testing.assert_allclose(float(d), fa @ fb, rtol=1e-5)
+    np.testing.assert_allclose(float(na), fa @ fa, rtol=1e-5)
+    np.testing.assert_allclose(float(nb), fb @ fb, rtol=1e-5)
+    np.testing.assert_allclose(float(treemath.tree_dot(a, b)), fa @ fb, rtol=1e-5)
+    np.testing.assert_allclose(float(treemath.tree_sqnorm(a)), fa @ fa, rtol=1e-5)
+
+
+def test_batched_ops():
+    stacked = jax.tree.map(lambda *x: jnp.stack(x),
+                           *[_rand_tree(i) for i in range(4)])
+    single = _rand_tree(7)
+    dots = np.asarray(treemath.tree_vdot_batched(stacked, single))
+    sqs = np.asarray(treemath.tree_sqnorm_batched(stacked))
+    fs = _np_flat(single)
+    for k in range(4):
+        fk = _np_flat(_rand_tree(k))
+        np.testing.assert_allclose(dots[k], fk @ fs, rtol=1e-5)
+        np.testing.assert_allclose(sqs[k], fk @ fk, rtol=1e-5)
+
+
+@hypothesis.given(st.lists(st.floats(-2, 2), min_size=2, max_size=6))
+def test_weighted_sum_linear(ws):
+    stacked = jax.tree.map(lambda *x: jnp.stack(x),
+                           *[_rand_tree(i) for i in range(len(ws))])
+    w = jnp.asarray(ws, jnp.float32)
+    got = treemath.tree_weighted_sum(stacked, w)
+    want = jax.tree.map(
+        lambda s: jnp.tensordot(w, s.astype(jnp.float32), axes=1), stacked
+    )
+    jax.tree.map(lambda g, x: np.testing.assert_allclose(
+        np.asarray(g), np.asarray(x), rtol=1e-4, atol=1e-5), got, want)
+
+
+def test_axpy_and_add_sub():
+    a, b = _rand_tree(0), _rand_tree(1)
+    got = treemath.tree_axpy(2.5, a, b)
+    np.testing.assert_allclose(_np_flat(got), 2.5 * _np_flat(a) + _np_flat(b),
+                               rtol=1e-5)
+    np.testing.assert_allclose(_np_flat(treemath.tree_sub(
+        treemath.tree_add(a, b), b)), _np_flat(a), rtol=1e-5, atol=1e-6)
+
+
+def test_bf16_accumulates_in_f32():
+    # 4096 bf16 ones: naive bf16 accumulation saturates at 256
+    t = {"x": jnp.ones((4096,), jnp.bfloat16)}
+    assert float(treemath.tree_sqnorm(t)) == 4096.0

@@ -1,0 +1,106 @@
+"""Property tests for the FedAdp weighting math (paper Eqs. 8-11, Thm. 2)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import weighting
+
+angles = hnp.arrays(
+    np.float64, st.integers(2, 16),
+    elements=st.floats(0.0, np.pi, allow_nan=False),
+)
+sizes = hnp.arrays(
+    np.float64, st.integers(2, 16),
+    elements=st.floats(1.0, 1e4, allow_nan=False),
+)
+
+
+@hypothesis.given(angles)
+def test_gompertz_monotone_decreasing_and_bounded(theta):
+    th = np.sort(theta)
+    f = np.asarray(weighting.gompertz(jnp.asarray(th)))
+    assert np.all(np.diff(f) <= 1e-6), "f must be non-increasing in theta"
+    assert np.all(f >= 0.0) and np.all(f <= weighting.DEFAULT_ALPHA + 1e-6)
+
+
+@hypothesis.given(st.data())
+def test_weights_form_simplex(data):
+    k = data.draw(st.integers(2, 16))
+    th = data.draw(hnp.arrays(np.float64, k, elements=st.floats(0, np.pi)))
+    d = data.draw(hnp.arrays(np.float64, k, elements=st.floats(1, 1e4)))
+    w = np.asarray(weighting.fedadp_weights(jnp.asarray(th), jnp.asarray(d)))
+    assert np.all(w >= 0)
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+
+
+@hypothesis.given(st.data())
+def test_equal_angles_reduce_to_fedavg(data):
+    """Eq. 11: when all smoothed angles are equal, FedAdp == FedAvg."""
+    k = data.draw(st.integers(2, 12))
+    th = data.draw(st.floats(0.0, np.pi))
+    d = data.draw(hnp.arrays(np.float64, k, elements=st.floats(1, 1e4)))
+    w_adp = np.asarray(
+        weighting.fedadp_weights(jnp.full((k,), th), jnp.asarray(d))
+    )
+    w_avg = np.asarray(weighting.fedavg_weights(jnp.asarray(d)))
+    np.testing.assert_allclose(w_adp, w_avg, rtol=1e-5)
+
+
+@hypothesis.given(st.data())
+def test_theorem2_expected_contribution(data):
+    """Thm. 2: FedAdp's E_{i|t}[cos theta_i] >= FedAvg's (equal data sizes).
+
+    Both weight orders follow the contribution order, so Chebyshev's sum
+    inequality applies; we check it numerically over random angle sets.
+    """
+    k = data.draw(st.integers(2, 16))
+    th = data.draw(
+        hnp.arrays(np.float64, k, elements=st.floats(0.0, np.pi * 0.999))
+    )
+    d = jnp.ones((k,))
+    th_j = jnp.asarray(th)
+    cos = jnp.cos(th_j)
+    e_adp = weighting.expected_contribution(
+        weighting.fedadp_weights(th_j, d), cos
+    )
+    e_avg = weighting.expected_contribution(weighting.fedavg_weights(d), cos)
+    assert float(e_adp) >= float(e_avg) - 1e-6
+
+
+def test_weights_ordering_tracks_contribution():
+    th = jnp.asarray([0.2, 0.8, 1.4])  # better -> worse
+    w = np.asarray(weighting.fedadp_weights(th, jnp.ones(3)))
+    assert w[0] > w[1] > w[2]
+
+
+def test_smoothed_angle_running_mean():
+    st_ = weighting.AngleState.init(3)
+    sel = jnp.asarray([True, True, False])
+    st_ = weighting.update_smoothed_angle(st_, jnp.asarray([1.0, 2.0, 9.0]), sel)
+    np.testing.assert_allclose(st_.smoothed, [1.0, 2.0, 0.0])
+    st_ = weighting.update_smoothed_angle(st_, jnp.asarray([3.0, 0.0, 9.0]),
+                                          jnp.asarray([True, False, False]))
+    np.testing.assert_allclose(st_.smoothed, [2.0, 2.0, 0.0])  # (1+3)/2
+    assert st_.count.tolist() == [2, 1, 0]
+
+
+def test_angle_from_stats_matches_arccos():
+    a = np.random.default_rng(0).normal(size=128)
+    b = np.random.default_rng(1).normal(size=128)
+    th = weighting.instantaneous_angle(
+        jnp.dot(a, b), jnp.dot(a, a), jnp.dot(b, b)
+    )
+    want = np.arccos(np.dot(a, b) / (np.linalg.norm(a) * np.linalg.norm(b)))
+    np.testing.assert_allclose(float(th), want, rtol=1e-5)
+
+
+def test_gompertz_alpha_amplifies_separation():
+    th = jnp.asarray([0.3, 1.2])
+    gaps = [
+        float(weighting.gompertz(th, alpha)[0] - weighting.gompertz(th, alpha)[1])
+        for alpha in (2.0, 5.0)
+    ]
+    assert gaps[1] > gaps[0]
