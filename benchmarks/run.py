@@ -120,7 +120,7 @@ def kernel_micro(full: bool = False) -> None:
     import jax
     import jax.numpy as jnp
 
-    from repro.kernels import grad_dot, ref, weighted_agg
+    from repro.kernels import grad_dot, ref, round_stats, weighted_agg
 
     n = 1 << 22 if full else 1 << 20
     a = jax.random.normal(jax.random.key(0), (n,), jnp.float32)
@@ -143,6 +143,58 @@ def kernel_micro(full: bool = False) -> None:
          timeit(weighted_agg.weighted_agg, w, x), f"shape={x.shape}")
     emit("kernel/weighted_agg/xla_ref",
          timeit(jax.jit(ref.weighted_agg), w, x), f"shape={x.shape}")
+    g = jax.random.normal(jax.random.key(4), (n // 8,), jnp.float32)
+    emit("kernel/round_stats/pallas_interp",
+         timeit(round_stats.round_stats, x, g), f"shape={x.shape}")
+    emit("kernel/round_stats/xla_ref",
+         timeit(jax.jit(ref.round_stats), x, g), f"shape={x.shape}")
+
+
+def engine_ab(full: bool = False) -> None:
+    """Tree vs flat round-engine A/B: identical toy inputs, per-round wall
+    time for each engine plus the flat/tree ratio.
+
+    On CPU the flat path runs the Pallas kernels in interpret mode, so the
+    ratio here measures the correctness path; the TPU projection lives in
+    the roofline analysis."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import fl as fl_mod
+    from repro.core.weighting import AngleState
+
+    K = 8
+    d = 1 << 16 if full else 1 << 14
+    tau, B = 2, 4
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.zeros((d, 1), jnp.float32),
+              "b": jnp.zeros((1,), jnp.float32)}
+    X = jnp.asarray(rng.normal(size=(K, tau, B, d)).astype(np.float32))
+    Y = jnp.asarray(rng.normal(size=(K, tau, B, 1)).astype(np.float32))
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    sel = jnp.arange(K, dtype=jnp.int32)
+    sizes = jnp.ones((K,), jnp.float32)
+    us = {}
+    for engine in ("tree", "flat"):
+        cfg = fl_mod.FLConfig(num_clients=K, clients_per_round=K,
+                              local_steps=tau, method="fedadp",
+                              engine=engine, base_lr=0.05)
+        rf = jax.jit(fl_mod.make_round_fn(loss_fn, cfg))
+        state = AngleState.init(K)
+        prev = fl_mod.init_prev_delta(params)
+        args = (params, state, prev, (X, Y), sel, sizes, jnp.int32(0))
+        jax.block_until_ready(rf(*args))  # compile
+        t0 = time.time()
+        reps = 5
+        for _ in range(reps):
+            jax.block_until_ready(rf(*args))
+        us[engine] = (time.time() - t0) / reps * 1e6
+        emit(f"engine_ab/{engine}/round", us[engine], f"K={K} d={d}")
+    emit("engine_ab/flat_over_tree", 0.0, f"{us['flat'] / us['tree']:.3f}")
 
 
 def roofline_table(full: bool = False) -> None:
@@ -175,6 +227,7 @@ BENCHES = {
     "fig7": fig7_divergence,
     "ablation": method_ablation,
     "kernels": kernel_micro,
+    "engine": engine_ab,
     "roofline": roofline_table,
 }
 

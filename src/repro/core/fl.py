@@ -33,6 +33,8 @@ import jax.numpy as jnp
 
 from repro.core import treemath, weighting
 from repro.core.weighting import AngleState
+from repro.kernels import round_stats as round_stats_mod
+from repro.kernels import weighted_agg as weighted_agg_mod
 
 PyTree = Any
 
@@ -48,6 +50,16 @@ class FLConfig:
     lr_decay: float = 0.995  # per communication round (paper Sec. V)
     mode: str = "parallel"  # parallel | sequential
     stale_angles: bool = False  # sequential one-pass variant
+    # parallel-mode execution engine:
+    #   "tree" — per-leaf treemath reductions (reference; keeps sharded
+    #            leaves sharded, the right trade on a mesh)
+    #   "flat" — deltas raveled once into a contiguous (K, N) f32 buffer;
+    #            angle stats + aggregation run as single-HBM-pass Pallas
+    #            kernels (round_stats / weighted_agg)
+    engine: str = "tree"  # tree | flat
+    # Pallas interpret mode for engine="flat": None = auto (interpret
+    # everywhere except a real TPU backend), or force True/False.
+    interpret: Optional[bool] = None
     # beyond-paper: restrict angle statistics to non-expert parameters —
     # MoE routing makes expert deltas sparse/noisy, polluting the cosine.
     angle_filter: str = "all"  # all | dense_only
@@ -83,6 +95,16 @@ def local_update(loss_fn: Callable, params: PyTree, batches: PyTree, lr,
     return treemath.tree_sub(p_fin, params), jnp.mean(losses)
 
 
+def angle_keep_list(params: PyTree, pred: Callable) -> list:
+    """One bool per leaf (flatten order): does `pred(path_keys, leaf)` keep it?"""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    keep = []
+    for path, leaf in flat:
+        keys = tuple(getattr(k, "key", getattr(k, "name", "")) for k in path)
+        keep.append(bool(pred(keys, leaf)))
+    return keep
+
+
 def build_angle_mask(params: PyTree, pred: Callable) -> Callable:
     """Angle-statistics leaf filter, decided ONCE on the param tree.
 
@@ -91,11 +113,7 @@ def build_angle_mask(params: PyTree, pred: Callable) -> Callable:
     order (params, deltas, or K-stacked deltas) down to the kept leaves —
     a list, which is itself a pytree treemath reductions accept.
     """
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    keep = []
-    for path, leaf in flat:
-        keys = tuple(getattr(k, "key", getattr(k, "name", "")) for k in path)
-        keep.append(bool(pred(keys, leaf)))
+    keep = angle_keep_list(params, pred)
 
     def mask(tree):
         leaves = jax.tree_util.tree_leaves(tree)
@@ -146,11 +164,30 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
     zeros-like(params) otherwise; it is threaded through untouched).
     `delta_constraint` optionally applies sharding constraints to the
     stacked deltas (parallel mode).
+
+    When `angle_pred` is None, `fl.angle_filter` selects a built-in
+    predicate ("dense_only" -> `moe_dense_only_pred`); an explicit
+    `angle_pred` overrides the config.
     """
+    if fl.angle_filter not in ("all", "dense_only"):
+        raise ValueError(f"unknown angle_filter {fl.angle_filter!r}")
+    if angle_pred is None and fl.angle_filter == "dense_only":
+        angle_pred = moe_dense_only_pred
+    if fl.engine not in ("tree", "flat"):
+        raise ValueError(f"unknown engine {fl.engine!r}")
+    if fl.engine == "flat" and fl.clients_per_round > round_stats_mod.MAX_K:
+        raise ValueError(
+            f"engine='flat' tiles the whole client axis into VMEM and "
+            f"supports at most K={round_stats_mod.MAX_K} clients per round "
+            f"(got {fl.clients_per_round}); use engine='tree'")
     if fl.mode == "parallel":
         return _make_parallel_round(loss_fn, fl, delta_constraint, angle_pred,
                                     grad_constraint)
     if fl.mode == "sequential":
+        if fl.engine == "flat":
+            raise ValueError(
+                "engine='flat' requires mode='parallel' (sequential mode "
+                "never materializes the stacked (K, N) delta buffer)")
         return _make_sequential_round(loss_fn, fl, angle_pred, grad_constraint)
     raise ValueError(fl.mode)
 
@@ -159,12 +196,17 @@ def _lr_at(fl: FLConfig, round_idx):
     return fl.base_lr * fl.lr_decay ** jnp.asarray(round_idx, jnp.float32)
 
 
+def _resolve_interpret(fl: FLConfig) -> bool:
+    if fl.interpret is not None:
+        return fl.interpret
+    return jax.default_backend() != "tpu"
+
+
 def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=None,
                          grad_constraint=None):
     def round_fn(params, angle_state: AngleState, prev_delta, batches,
                  sel_idx, data_sizes, round_idx):
         lr = _lr_at(fl, round_idx)
-        angle_mask = build_angle_mask(params, angle_pred) if angle_pred else None
         deltas, losses = jax.vmap(
             lambda b: local_update(loss_fn, params, b, lr, fl.prox_mu,
                                    grad_constraint)
@@ -173,12 +215,34 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             deltas = delta_constraint(deltas)
 
         psi_avg = weighting.fedavg_weights(data_sizes)
-        g_avg = treemath.tree_weighted_sum(deltas, psi_avg)
-        d_view = angle_mask(deltas) if angle_mask else deltas
-        g_view = angle_mask(g_avg) if angle_mask else g_avg
-        dots = treemath.tree_vdot_batched(d_view, g_view)
-        sqs = treemath.tree_sqnorm_batched(d_view)
-        sqg = treemath.tree_sqnorm(g_view)
+
+        if fl.engine == "flat":
+            # single (K, N) ravel; stats + both aggregations are fused
+            # single-HBM-pass kernels over the contiguous buffer.
+            interpret = _resolve_interpret(fl)
+            flat, unravel = treemath.tree_ravel_stacked(deltas)
+            g_flat = weighted_agg_mod.weighted_agg(psi_avg, flat,
+                                                   interpret=interpret)
+            maskv = (
+                treemath.segment_mask(params,
+                                      angle_keep_list(params, angle_pred))
+                if angle_pred else None
+            )
+            dots, sqs, sqg = round_stats_mod.round_stats(
+                flat, g_flat, maskv, interpret=interpret)
+            g_avg = unravel(g_flat, jnp.float32)
+        else:
+            angle_mask = (build_angle_mask(params, angle_pred)
+                          if angle_pred else None)
+            # f32: rounding g to the (possibly bf16) leaf dtype before the
+            # stats would lose the angle signal and diverge from the flat
+            # engine; also matches init_prev_delta's f32 threading.
+            g_avg = treemath.tree_weighted_sum(deltas, psi_avg, jnp.float32)
+            d_view = angle_mask(deltas) if angle_mask else deltas
+            g_view = angle_mask(g_avg) if angle_mask else g_avg
+            dots = treemath.tree_vdot_batched(d_view, g_view)
+            sqs = treemath.tree_sqnorm_batched(d_view)
+            sqg = treemath.tree_sqnorm(g_view)
         theta = weighting.instantaneous_angle(dots, sqs, sqg)
 
         new_state = _scatter_angles(angle_state, sel_idx, theta)
@@ -187,7 +251,15 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             w = weighting.fedadp_weights(theta_sm, data_sizes, fl.alpha)
         else:  # fedavg / fedprox aggregate by data size
             w = psi_avg
-        delta = treemath.tree_weighted_sum(deltas, w)
+        if fl.engine == "flat":
+            # fedavg/fedprox aggregate with w == psi_avg: reuse g_flat rather
+            # than re-streaming the (K, N) buffer (Pallas calls aren't CSE'd)
+            delta_flat = (g_flat if fl.method != "fedadp" else
+                          weighted_agg_mod.weighted_agg(w, flat,
+                                                        interpret=interpret))
+            delta = unravel(delta_flat)
+        else:
+            delta = treemath.tree_weighted_sum(deltas, w)
         new_params = treemath.tree_add(params, delta)
 
         # Fig.7 divergence: (1/K) sum_i ||dF - dF_i|| with dF ~ -delta/lr

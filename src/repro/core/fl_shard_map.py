@@ -140,5 +140,8 @@ def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
         smap = jax.shard_map
     except AttributeError:  # older jax
         from jax.experimental.shard_map import shard_map as smap
-    return smap(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                check_vma=False)
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return smap(body, check_vma=False, **kw)
+    except TypeError:  # jax < 0.6 spells it check_rep
+        return smap(body, check_rep=False, **kw)

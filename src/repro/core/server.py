@@ -41,7 +41,11 @@ class FedServer:
         test: Dataset,
         batch_size: int,
         seed: int = 0,
+        angle_pred: Optional[Callable] = None,
     ):
+        # fl.engine selects the round execution path ("tree" reference vs
+        # the flat-buffer Pallas path) and fl.angle_filter the built-in
+        # angle predicate; both flow through make_round_fn unchanged.
         self.fl = fl
         self.nodes = nodes
         self.test = test
@@ -54,7 +58,8 @@ class FedServer:
             x, y = batch
             return small.classification_loss(self.apply_fn, params, x, y)
 
-        self.round_fn = jax.jit(fl_mod.make_round_fn(loss_fn, fl))
+        self.round_fn = jax.jit(
+            fl_mod.make_round_fn(loss_fn, fl, angle_pred=angle_pred))
         self.angle_state = AngleState.init(fl.num_clients)
         self.prev_delta = fl_mod.init_prev_delta(self.params)
         self.round = 0

@@ -10,10 +10,12 @@ XLA-fused) and the Pallas kernels in ``repro.kernels`` (TPU-tiled).
 from __future__ import annotations
 
 import functools
-from typing import Any
+import math
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -85,16 +87,21 @@ def tree_cast(a: PyTree, dtype) -> PyTree:
     return jax.tree.map(lambda x: x.astype(dtype), a)
 
 
-def tree_weighted_sum(trees_stacked: PyTree, weights: jax.Array) -> PyTree:
+def tree_weighted_sum(trees_stacked: PyTree, weights: jax.Array,
+                      dtype=None) -> PyTree:
     """sum_k w[k] * tree[k] for a pytree whose leaves have a leading K axis.
 
     Used by the client-parallel engine where per-client deltas are stacked
-    along axis 0. Accumulates in f32.
+    along axis 0. Accumulates in f32; `dtype` overrides the output leaf
+    dtype (default: the input leaf dtype). Pass jnp.float32 when the
+    result feeds angle statistics — rounding the global delta to bf16
+    first would discard the very signal the f32 reductions preserve.
     """
 
     def leaf(x):
         w = weights.astype(jnp.float32).reshape((-1,) + (1,) * (x.ndim - 1))
-        return jnp.sum(x.astype(jnp.float32) * w, axis=0).astype(x.dtype)
+        return jnp.sum(x.astype(jnp.float32) * w, axis=0).astype(
+            dtype or x.dtype)
 
     return jax.tree.map(leaf, trees_stacked)
 
@@ -126,3 +133,81 @@ def tree_sqnorm_batched(stacked: PyTree) -> jax.Array:
 
 def global_norm(a: PyTree) -> jax.Array:
     return jnp.sqrt(tree_sqnorm(a))
+
+
+# ---------------------------------------------------------------------------
+# Flat-buffer view (the `engine="flat"` round path).
+#
+# The per-leaf reductions above keep sharded leaves sharded — that is the
+# right trade on a mesh. On a single accelerator the opposite holds: one
+# contiguous (K, N) buffer lets the whole contribution-measurement +
+# aggregation step stream through the fused Pallas kernels in a single HBM
+# pass. `tree_ravel_stacked` builds that view once per round; the returned
+# unflattener is cached on (treedef, shapes, dtypes) so repeated traces
+# reuse the same slice plan.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_unravel(treedef, shapes, dtypes) -> Callable:
+    sizes = [math.prod(s) for s in shapes]
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+
+    def unravel(vec: jax.Array, dtype=None) -> PyTree:
+        """dtype overrides the recorded leaf dtypes (e.g. jnp.float32 to
+        keep an f32 view for angle statistics instead of rounding back)."""
+        leaves = [
+            jax.lax.slice(vec, (int(offsets[i]),), (int(offsets[i + 1]),))
+            .reshape(shapes[i])
+            .astype(dtype or dtypes[i])
+            for i in range(len(shapes))
+        ]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    return unravel
+
+
+def tree_ravel(tree: PyTree) -> tuple[jax.Array, Callable]:
+    """Flatten a pytree into one contiguous (N,) f32 vector.
+
+    Returns (vec, unravel) where unravel(vec) restores the original
+    structure, shapes, and leaf dtypes. The unflattener is cached.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    vec = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    return vec, _cached_unravel(treedef, shapes, dtypes)
+
+
+def tree_ravel_stacked(stacked: PyTree) -> tuple[jax.Array, Callable]:
+    """Flatten a K-stacked pytree (leaves (K, ...)) into a (K, N) f32 buffer.
+
+    Returns (buf, unravel). unravel maps an (N,) vector back to ONE
+    unstacked tree — leaf shapes without the K axis, original dtypes — so
+    the aggregated flat delta lands directly in parameter structure.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    k = leaves[0].shape[0]
+    shapes = tuple(tuple(l.shape[1:]) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    buf = jnp.concatenate(
+        [l.reshape(k, -1).astype(jnp.float32) for l in leaves], axis=1
+    )
+    return buf, _cached_unravel(treedef, shapes, dtypes)
+
+
+def segment_mask(tree: PyTree, keep: list) -> jax.Array:
+    """(N,) f32 0/1 mask over the ravel order: 1 where the leaf is kept.
+
+    `keep` is one bool per leaf (same flatten order as `tree_ravel`); the
+    mask is a trace-time constant, so masking the flat buffer costs one
+    elementwise multiply and no host round-trips.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    assert len(leaves) == len(keep), "keep/tree flatten-order mismatch"
+    parts = [
+        np.full(math.prod(l.shape), 1.0 if k else 0.0, np.float32)
+        for l, k in zip(leaves, keep)
+    ]
+    return jnp.asarray(np.concatenate(parts))

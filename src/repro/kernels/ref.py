@@ -21,6 +21,17 @@ def batched_dot(x: jax.Array, g: jax.Array):
     return x.astype(jnp.float32) @ g.astype(jnp.float32)
 
 
+def round_stats(x: jax.Array, g: jax.Array, mask: jax.Array | None = None):
+    """(dots (K,), sqnorms (K,), sqg ()) over x (K, N), g (N,)."""
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    if mask is not None:
+        mf = mask.astype(jnp.float32)
+        xf = xf * mf[None]
+        gf = gf * mf
+    return xf @ gf, jnp.sum(xf * xf, axis=1), jnp.dot(gf, gf)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True):
     """Naive softmax attention oracle. q/k/v (BH, T, d)."""

@@ -18,6 +18,18 @@ from jax.experimental import pallas as pl
 
 LANE = 128
 ROWS = 128  # per-client block: 128*128*4 B = 64 KiB; K<=32 -> <=2 MiB VMEM
+# These kernels tile the WHOLE client axis into one VMEM block; past this
+# the x tile crowds out double-buffering on a ~16 MiB core. Enforced at
+# trace time (K is static) so TPU callers get a ValueError, not an opaque
+# Mosaic compile failure.
+MAX_K = 32
+
+
+def check_k(k: int) -> None:
+    if k > MAX_K:
+        raise ValueError(
+            f"K={k} exceeds MAX_K={MAX_K} for whole-K VMEM tiling; shard "
+            f"the client axis or use the tree engine")
 
 
 def _agg_kernel(w_ref, x_ref, y_ref):
@@ -30,6 +42,7 @@ def _agg_kernel(w_ref, x_ref, y_ref):
 def weighted_agg(w: jax.Array, x: jax.Array, *, interpret: bool = True):
     """y[n] = sum_k w[k] x[k, n]. x: (K, N) any float dtype; f32 accumulate."""
     K, n = x.shape
+    check_k(K)
     block = ROWS * LANE
     pad = (-n) % block
     if pad:
@@ -66,6 +79,7 @@ def _bdot_kernel(x_ref, g_ref, out_ref):
 def batched_dot(x: jax.Array, g: jax.Array, *, interpret: bool = True):
     """u[k] = <x[k], g>. x: (K, N), g: (N,)."""
     K, n = x.shape
+    check_k(K)
     block = ROWS * LANE
     pad = (-n) % block
     if pad:

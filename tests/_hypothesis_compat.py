@@ -1,0 +1,42 @@
+"""Optional-hypothesis shim for the property tests.
+
+`from _hypothesis_compat import hypothesis, hnp, st` gives the real
+modules when hypothesis is installed; otherwise `hypothesis.given`
+becomes a skip marker and the strategy modules become inert stand-ins
+(strategies are built at module-import time, so attribute access and
+calls must not raise). Non-property tests in the same module keep
+running either way.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+    class _InertStrategy:
+        """Absorbs strategy construction: any attribute or call -> itself."""
+
+        def __getattr__(self, _name):
+            return self
+
+        def __call__(self, *_args, **_kwargs):
+            return self
+
+    class _HypothesisStub:
+        HealthCheck = _InertStrategy()
+        settings = _InertStrategy()
+
+        @staticmethod
+        def given(*_args, **_kwargs):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+    hypothesis = _HypothesisStub()
+    st = _InertStrategy()
+    hnp = _InertStrategy()

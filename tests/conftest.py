@@ -5,11 +5,18 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import hypothesis
+# hypothesis is optional: property tests skip when it is absent (test
+# modules import it through _hypothesis_compat, which stubs `given` with
+# a skip marker). See requirements-dev.txt for the pinned dev install.
+try:
+    import hypothesis
+except ModuleNotFoundError:
+    hypothesis = None
 
-# jit compilation inside hypothesis bodies makes wall-time deadlines noisy
-hypothesis.settings.register_profile(
-    "repro", deadline=None, max_examples=25,
-    suppress_health_check=[hypothesis.HealthCheck.too_slow],
-)
-hypothesis.settings.load_profile("repro")
+if hypothesis is not None:
+    # jit compilation inside hypothesis bodies makes wall-time deadlines noisy
+    hypothesis.settings.register_profile(
+        "repro", deadline=None, max_examples=25,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow],
+    )
+    hypothesis.settings.load_profile("repro")

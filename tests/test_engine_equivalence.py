@@ -1,0 +1,201 @@
+"""Flat-buffer vs tree round-engine equivalence (the engine="flat" contract).
+
+The tree engine is the reference implementation; the flat engine re-routes
+the identical round math through `tree_ravel_stacked` + the fused Pallas
+kernels (`round_stats`, `weighted_agg`). Multi-round trajectories must
+agree to 1e-5 for both methods, with and without the MoE angle filter, and
+the parallel engines must agree with the sequential scan under full
+participation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fl
+from repro.core.weighting import AngleState
+
+K = 4
+
+
+def _toy_problem(tau=3, B=8, d=12, seed=0):
+    """Non-IID linear-regression clients, plus a rank-4 'ffn/w_gate' leaf so
+    angle_filter="dense_only" (moe_dense_only_pred) actually drops a segment
+    of the flat buffer."""
+    rng = np.random.default_rng(seed)
+    params = {
+        "w": jnp.zeros((d, 1), jnp.float32),
+        "b": jnp.zeros((1,), jnp.float32),
+        "ffn": {"w_gate": jnp.full((1, 1, 4, 4), 0.1, jnp.float32)},
+    }
+    X = rng.normal(size=(K, tau, B, d)).astype(np.float32)
+    w_true = rng.normal(size=(K, d, 1)).astype(np.float32)
+    Y = np.einsum("ktbd,kde->ktbe", X, w_true)
+
+    def loss_fn(p, batch):
+        x, y = batch
+        pred = x @ p["w"] + p["b"] + jnp.sum(p["ffn"]["w_gate"] ** 2)
+        return jnp.mean((pred - y) ** 2)
+
+    return params, loss_fn, (jnp.asarray(X), jnp.asarray(Y))
+
+
+def _run(engine, method, angle_filter="all", mode="parallel", rounds=4,
+         seed=0):
+    params, loss_fn, batches = _toy_problem(seed=seed)
+    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                      method=method, mode=mode, engine=engine,
+                      angle_filter=angle_filter, base_lr=0.05)
+    rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
+    state = AngleState.init(K)
+    prev = fl.init_prev_delta(params)
+    sel = jnp.arange(K, dtype=jnp.int32)
+    sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+    ms = []
+    for r in range(rounds):
+        params, state, prev, m = rf(params, state, prev, batches, sel, sizes,
+                                    jnp.int32(r))
+        ms.append(m)
+    return params, state, ms
+
+
+def _assert_trees_close(a, b, atol=1e-5):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-5, atol=atol),
+        a, b,
+    )
+
+
+@pytest.mark.parametrize("angle_filter", ["all", "dense_only"])
+@pytest.mark.parametrize("method", ["fedadp", "fedavg"])
+def test_flat_matches_tree_multi_round(method, angle_filter):
+    p_t, s_t, m_t = _run("tree", method, angle_filter)
+    p_f, s_f, m_f = _run("flat", method, angle_filter)
+    _assert_trees_close(p_t, p_f)
+    np.testing.assert_allclose(s_t.smoothed, s_f.smoothed, atol=1e-5)
+    assert s_t.count.tolist() == s_f.count.tolist()
+    for mt, mf in zip(m_t, m_f):
+        for key in ("theta", "theta_smoothed", "weights", "divergence",
+                    "loss", "cos", "expected_contribution"):
+            np.testing.assert_allclose(
+                np.asarray(mt[key]), np.asarray(mf[key]), rtol=1e-5,
+                atol=1e-5, err_msg=f"metric {key}")
+
+
+@pytest.mark.parametrize("method", ["fedadp", "fedavg"])
+def test_flat_matches_tree_bf16(method):
+    """bf16 params: both engines compute angle stats from the UNROUNDED f32
+    global delta, so trajectories agree to bf16 resolution (params are
+    rounded to bf16 each round, so exact 1e-5 equality is a f32-only
+    contract), and param dtype survives the round trip."""
+    rng = np.random.default_rng(0)
+    d = 12
+    X = jnp.asarray(rng.normal(size=(K, 3, 8, d)).astype(np.float32))
+    w_true = rng.normal(size=(K, d, 1)).astype(np.float32)
+    Y = jnp.asarray(np.einsum("ktbd,kde->ktbe", X, w_true))
+
+    def loss_fn(p, batch):
+        x, y = batch
+        pred = x @ p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+        return jnp.mean((pred - y) ** 2)
+
+    outs = {}
+    for engine in ("tree", "flat"):
+        params = {"w": jnp.zeros((d, 1), jnp.bfloat16),
+                  "b": jnp.zeros((1,), jnp.bfloat16)}
+        cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                          method=method, engine=engine, base_lr=0.05)
+        rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
+        state = AngleState.init(K)
+        prev = fl.init_prev_delta(params)
+        sel = jnp.arange(K, dtype=jnp.int32)
+        sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+        for r in range(3):
+            params, state, prev, m = rf(params, state, prev, (X, Y), sel,
+                                        sizes, jnp.int32(r))
+        outs[engine] = (params, m)
+    for a, b in zip(jax.tree.leaves(outs["tree"][0]),
+                    jax.tree.leaves(outs["flat"][0])):
+        assert a.dtype == jnp.bfloat16 and b.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-2)
+    np.testing.assert_allclose(np.asarray(outs["tree"][1]["theta"]),
+                               np.asarray(outs["flat"][1]["theta"]),
+                               atol=1e-2)
+
+
+def test_dense_only_filter_changes_angles_in_both_engines():
+    """The segment mask must actually bite (w_gate deltas are nonzero), and
+    it must bite identically in both engines."""
+    for engine in ("tree", "flat"):
+        _, _, m_all = _run(engine, "fedadp", "all")
+        _, _, m_dense = _run(engine, "fedadp", "dense_only")
+        assert not np.allclose(np.asarray(m_all[-1]["theta"]),
+                               np.asarray(m_dense[-1]["theta"])), engine
+
+
+@pytest.mark.parametrize("engine", ["tree", "flat"])
+def test_parallel_engine_matches_sequential(engine):
+    """Under full participation both parallel engines implement the same
+    math as the sequential two-pass scan."""
+    p_par, s_par, m_par = _run(engine, "fedadp", mode="parallel")
+    p_seq, s_seq, m_seq = _run("tree", "fedadp", mode="sequential")
+    _assert_trees_close(p_par, p_seq, atol=2e-5)
+    np.testing.assert_allclose(s_par.smoothed, s_seq.smoothed, rtol=2e-4)
+    np.testing.assert_allclose(m_par[-1]["weights"], m_seq[-1]["weights"],
+                               rtol=2e-4)
+
+
+def test_flat_engine_requires_parallel_mode():
+    params, loss_fn, _ = _toy_problem()
+    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                      mode="sequential", engine="flat")
+    with pytest.raises(ValueError, match="flat"):
+        fl.make_round_fn(loss_fn, cfg)
+
+
+def test_flat_engine_rejects_oversized_k():
+    """K beyond the VMEM tiling budget must fail loudly at build time, not
+    as a Mosaic compile error on TPU."""
+    params, loss_fn, _ = _toy_problem()
+    cfg = fl.FLConfig(num_clients=64, clients_per_round=64, local_steps=3,
+                      engine="flat")
+    with pytest.raises(ValueError, match="at most K=32"):
+        fl.make_round_fn(loss_fn, cfg)
+
+
+def test_unknown_engine_rejected():
+    params, loss_fn, _ = _toy_problem()
+    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                      engine="nope")
+    with pytest.raises(ValueError, match="engine"):
+        fl.make_round_fn(loss_fn, cfg)
+
+
+def test_unknown_angle_filter_rejected():
+    """A typo'd filter must not silently run with unfiltered stats."""
+    params, loss_fn, _ = _toy_problem()
+    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                      angle_filter="dense-only")
+    with pytest.raises(ValueError, match="angle_filter"):
+        fl.make_round_fn(loss_fn, cfg)
+
+
+def test_flat_engine_subset_selection():
+    """Subset participation: angle-state slots update identically."""
+    params, loss_fn, batches = _toy_problem()
+    outs = {}
+    for engine in ("tree", "flat"):
+        cfg = fl.FLConfig(num_clients=8, clients_per_round=K, local_steps=3,
+                          method="fedadp", engine=engine, base_lr=0.05)
+        rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
+        state = AngleState.init(8)
+        sel = jnp.asarray([1, 3, 5, 7], jnp.int32)
+        p, state, _, _ = rf(params, state, fl.init_prev_delta(params),
+                            batches, sel, jnp.ones((K,)), jnp.int32(0))
+        outs[engine] = (p, state)
+    _assert_trees_close(outs["tree"][0], outs["flat"][0])
+    np.testing.assert_allclose(outs["tree"][1].smoothed,
+                               outs["flat"][1].smoothed, atol=1e-5)
+    assert outs["flat"][1].count.tolist() == [0, 1, 0, 1, 0, 1, 0, 1]

@@ -5,10 +5,12 @@ import numpy as np
 import pytest
 
 from repro.core import treemath
-from repro.kernels import grad_dot, ops, ref, weighted_agg
+from repro.kernels import grad_dot, ops, ref, round_stats, weighted_agg
 
 SHAPES = [(7,), (128,), (65536,), (1000, 333), (3, 17, 129)]
 DTYPES = [jnp.float32, jnp.bfloat16]
+# padding edges around the 128*128 block: one short, exact, one over, ragged
+NS = [100, 16383, 16384, 16385, 70001]
 
 
 @pytest.mark.parametrize("shape", SHAPES)
@@ -23,8 +25,8 @@ def test_grad_dot_stats(shape, dtype):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=rtol)
 
 
-@pytest.mark.parametrize("k", [1, 4, 16])
-@pytest.mark.parametrize("n", [100, 16384, 70001])
+@pytest.mark.parametrize("k", [1, 4, 32])
+@pytest.mark.parametrize("n", NS)
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_weighted_agg(k, n, dtype):
     x = jax.random.normal(jax.random.key(0), (k, n), dtype)
@@ -37,15 +39,73 @@ def test_weighted_agg(k, n, dtype):
     )
 
 
-@pytest.mark.parametrize("k", [2, 8])
-@pytest.mark.parametrize("n", [128, 50000])
-def test_batched_dot(k, n):
-    x = jax.random.normal(jax.random.key(0), (k, n), jnp.float32)
-    g = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+@pytest.mark.parametrize("k", [1, 8, 32])
+@pytest.mark.parametrize("n", [128, 16385, 50000])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_batched_dot(k, n, dtype):
+    x = jax.random.normal(jax.random.key(0), (k, n), dtype)
+    g = jax.random.normal(jax.random.key(1), (n,), dtype)
+    rtol = 1e-3 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(
         np.asarray(weighted_agg.batched_dot(x, g)),
-        np.asarray(ref.batched_dot(x, g)), rtol=1e-3,
+        np.asarray(ref.batched_dot(x, g)), rtol=rtol, atol=1e-2,
     )
+
+
+@pytest.mark.parametrize("k", [1, 8, 32])
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_round_stats(k, n, dtype):
+    x = jax.random.normal(jax.random.key(0), (k, n), dtype)
+    g = jax.random.normal(jax.random.key(1), (n,), dtype)
+    got = round_stats.round_stats(x, g)
+    want = ref.round_stats(x, g)
+    rtol = 1e-3 if dtype == jnp.float32 else 2e-2
+    for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(ww), rtol=rtol,
+                                   err_msg=name)
+
+
+@pytest.mark.parametrize("n", [100, 16385])
+def test_round_stats_masked(n):
+    x = jax.random.normal(jax.random.key(0), (4, n), jnp.float32)
+    g = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+    mask = (jax.random.uniform(jax.random.key(2), (n,)) > 0.5).astype(
+        jnp.float32)
+    got = round_stats.round_stats(x, g, mask)
+    want = ref.round_stats(x, g, mask)
+    for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(ww), rtol=1e-3,
+                                   err_msg=name)
+    # masked stats == stats over the masked subspace, not a rescale
+    full = round_stats.round_stats(x, g)
+    assert not np.allclose(np.asarray(got[1]), np.asarray(full[1]))
+
+
+def test_kernels_reject_oversized_k():
+    """Whole-K VMEM tiling: K beyond the budget must raise at trace time
+    (on TPU the alternative is an opaque Mosaic compile failure)."""
+    k = weighted_agg.MAX_K + 1
+    x = jnp.zeros((k, 256), jnp.float32)
+    g = jnp.zeros((256,), jnp.float32)
+    w = jnp.zeros((k,), jnp.float32)
+    with pytest.raises(ValueError, match="MAX_K"):
+        weighted_agg.weighted_agg(w, x)
+    with pytest.raises(ValueError, match="MAX_K"):
+        weighted_agg.batched_dot(x, g)
+    with pytest.raises(ValueError, match="MAX_K"):
+        round_stats.round_stats(x, g)
+
+
+def test_round_stats_bf16_accumulates_in_f32():
+    # 2^14 bf16 ones: naive bf16 accumulation saturates at 256
+    n = 1 << 14
+    x = jnp.ones((2, n), jnp.bfloat16)
+    g = jnp.ones((n,), jnp.bfloat16)
+    dots, sqs, sqg = round_stats.round_stats(x, g)
+    assert float(sqg) == float(n)
+    np.testing.assert_allclose(np.asarray(dots), [n, n])
+    np.testing.assert_allclose(np.asarray(sqs), [n, n])
 
 
 def _tree(key, dtype=jnp.float32):

@@ -1,9 +1,8 @@
 """treemath vs numpy ground truth, incl. hypothesis property checks."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+from _hypothesis_compat import hypothesis, st
 
 from repro.core import treemath
 
@@ -70,3 +69,65 @@ def test_bf16_accumulates_in_f32():
     # 4096 bf16 ones: naive bf16 accumulation saturates at 256
     t = {"x": jnp.ones((4096,), jnp.bfloat16)}
     assert float(treemath.tree_sqnorm(t)) == 4096.0
+
+
+def test_tree_ravel_round_trip():
+    t = _rand_tree(0)
+    vec, unravel = treemath.tree_ravel(t)
+    assert vec.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(vec), _np_flat(t).astype(np.float32))
+    back = unravel(vec)
+    assert jax.tree.structure(back) == jax.tree.structure(t)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), back, t)
+
+
+def test_tree_ravel_round_trip_preserves_dtype():
+    t = _rand_tree(3, jnp.bfloat16)
+    vec, unravel = treemath.tree_ravel(t)
+    back = unravel(vec)
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(back))
+
+
+def test_tree_ravel_stacked_matches_per_client_ravel():
+    trees = [_rand_tree(i) for i in range(3)]
+    stacked = jax.tree.map(lambda *x: jnp.stack(x), *trees)
+    buf, unravel = treemath.tree_ravel_stacked(stacked)
+    assert buf.shape[0] == 3 and buf.dtype == jnp.float32
+    for k, t in enumerate(trees):
+        np.testing.assert_allclose(np.asarray(buf[k]),
+                                   _np_flat(t).astype(np.float32))
+    # unravel maps an (N,) row back to the UNSTACKED structure
+    back = unravel(buf[1])
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6), back, trees[1])
+
+
+def test_ravel_consistent_with_tree_reductions():
+    a, b = _rand_tree(0), _rand_tree(1)
+    va, _ = treemath.tree_ravel(a)
+    vb, _ = treemath.tree_ravel(b)
+    np.testing.assert_allclose(float(jnp.dot(va, vb)),
+                               float(treemath.tree_dot(a, b)), rtol=1e-5)
+    np.testing.assert_allclose(float(jnp.dot(va, va)),
+                               float(treemath.tree_sqnorm(a)), rtol=1e-5)
+
+
+def test_unravel_cache_reused():
+    t = _rand_tree(0)
+    _, u1 = treemath.tree_ravel(t)
+    _, u2 = treemath.tree_ravel(_rand_tree(5))  # same structure/shapes/dtypes
+    assert u1 is u2
+    _, u3 = treemath.tree_ravel({"z": jnp.zeros((3,))})
+    assert u3 is not u1
+
+
+def test_segment_mask_alignment():
+    t = _rand_tree(0)
+    keep = [True, False, True]  # flatten order: x, y[0], y[1]
+    m = np.asarray(treemath.segment_mask(t, keep))
+    sizes = [x.size for x in jax.tree.leaves(t)]
+    assert m.shape == (sum(sizes),)
+    np.testing.assert_array_equal(m[: sizes[0]], 1.0)
+    np.testing.assert_array_equal(m[sizes[0]: sizes[0] + sizes[1]], 0.0)
+    np.testing.assert_array_equal(m[sizes[0] + sizes[1]:], 1.0)

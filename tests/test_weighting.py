@@ -1,10 +1,7 @@
 """Property tests for the FedAdp weighting math (paper Eqs. 8-11, Thm. 2)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
+from _hypothesis_compat import hnp, hypothesis, st
 
 from repro.core import weighting
 

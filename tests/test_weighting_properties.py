@@ -1,0 +1,73 @@
+"""Property tests for core/weighting.py over seeded random draws.
+
+Unlike test_weighting.py (hypothesis, skipped when the package is
+missing), these run everywhere: each test sweeps many random angle/size
+draws with a seeded numpy generator, so CPU CI always exercises the
+simplex, monotonicity, and Theorem-2 properties.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import weighting
+
+SEEDS = [0, 1, 2, 3, 4]
+DRAWS_PER_SEED = 20
+
+
+def _draw(rng):
+    k = int(rng.integers(2, 17))
+    theta = rng.uniform(0.0, np.pi, size=k)
+    sizes = rng.uniform(1.0, 1e4, size=k)
+    return jnp.asarray(theta), jnp.asarray(sizes)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fedadp_weights_form_simplex(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(DRAWS_PER_SEED):
+        theta, sizes = _draw(rng)
+        w = np.asarray(weighting.fedadp_weights(theta, sizes))
+        assert np.all(w >= 0)
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("alpha", [2.0, 5.0, 10.0])
+def test_gompertz_monotone_decreasing_in_theta(seed, alpha):
+    rng = np.random.default_rng(seed)
+    for _ in range(DRAWS_PER_SEED):
+        th = np.sort(rng.uniform(0.0, np.pi, size=int(rng.integers(2, 17))))
+        f = np.asarray(weighting.gompertz(jnp.asarray(th), alpha))
+        assert np.all(np.diff(f) <= 1e-6), (alpha, th, f)
+        assert np.all(f >= 0.0) and np.all(f <= alpha + 1e-6)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_theorem2_fedadp_contribution_dominates_fedavg(seed):
+    """Thm. 2: E_{i|t}[cos theta_i] under FedAdp weights >= under FedAvg
+    (equal data sizes — Chebyshev's sum inequality applies because both
+    weight orders track the contribution order)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(DRAWS_PER_SEED):
+        k = int(rng.integers(2, 17))
+        theta = jnp.asarray(rng.uniform(0.0, np.pi * 0.999, size=k))
+        d = jnp.ones((k,))
+        cos = jnp.cos(theta)
+        e_adp = weighting.expected_contribution(
+            weighting.fedadp_weights(theta, d), cos)
+        e_avg = weighting.expected_contribution(
+            weighting.fedavg_weights(d), cos)
+        assert float(e_adp) >= float(e_avg) - 1e-6
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_equal_angles_reduce_to_fedavg(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(DRAWS_PER_SEED):
+        k = int(rng.integers(2, 13))
+        th = float(rng.uniform(0.0, np.pi))
+        d = jnp.asarray(rng.uniform(1.0, 1e4, size=k))
+        w_adp = np.asarray(weighting.fedadp_weights(jnp.full((k,), th), d))
+        w_avg = np.asarray(weighting.fedavg_weights(d))
+        np.testing.assert_allclose(w_adp, w_avg, rtol=1e-5)
