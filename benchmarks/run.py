@@ -5,7 +5,7 @@ Prints ``name,us_per_call,derived`` CSV lines. `us_per_call` is the wall
 time per federated round (or per kernel call); `derived` is the
 table/figure quantity (rounds-to-target, accuracy, divergence ratio, ...).
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--tiny] [--only NAME]
 """
 from __future__ import annotations
 
@@ -57,22 +57,29 @@ def fig5_general_heterogeneity(full: bool = False) -> None:
     """Paper Fig. 5: general (random x_i) heterogeneity, no pure-IID nodes."""
     rng = np.random.default_rng(0)
     case1 = [("xclass", int(x)) for x in rng.permutation(np.arange(1, 11))]
-    case2 = [("xclass", int(x)) for x in rng.integers(1, 6, 5)] + [
-        ("xclass", int(x)) for x in rng.integers(6, 11, 5)
-    ]
-    for cname, spec in [("case1", case1), ("case2", case2)]:
+    lo = [("xclass", int(x)) for x in rng.integers(1, 6, 5)]
+    hi = [("xclass", int(x)) for x in rng.integers(6, 11, 5)]
+    for cname, spec in [("case1", case1), ("case2", lo + hi)]:
         for method in ("fedavg", "fedadp"):
             hist, spr = run_fl(method, spec, rounds=40, target=None)
-            emit(f"fig5/{cname}/{method}/acc@40", spr * 1e6,
-                 f"{hist.final_accuracy:.4f}")
+            emit(
+                f"fig5/{cname}/{method}/acc@40",
+                spr * 1e6,
+                f"{hist.final_accuracy:.4f}",
+            )
 
 
 def fig6_alpha_sweep(full: bool = False) -> None:
     """Paper Fig. 6: effect of the Gompertz alpha (best ~5)."""
     alphas = (1, 2, 5, 7, 10) if full else (2, 5, 10)
     for alpha in alphas:
-        hist, spr = run_fl("fedadp", node_spec(5, 5, 1), rounds=30,
-                           target=None, alpha=float(alpha))
+        hist, spr = run_fl(
+            "fedadp",
+            node_spec(5, 5, 1),
+            rounds=30,
+            target=None,
+            alpha=float(alpha),
+        )
         emit(f"fig6/alpha={alpha}/acc@30", spr * 1e6, f"{hist.final_accuracy:.4f}")
 
 
@@ -94,21 +101,30 @@ def method_ablation(full: bool = False) -> None:
     from repro.data import synthetic
 
     train, test = get_task()
-    nodes = synthetic.make_federated(train, node_spec(5, 5, 1),
-                                     samples_per_node=600, seed=1)
+    nodes = synthetic.make_federated(
+        train, node_spec(5, 5, 1), samples_per_node=600, seed=1
+    )
     rounds = 120 if full else 60
     for method, mu in (("fedavg", 0.0), ("fedprox", 0.1), ("fedadp", 0.0)):
-        cfg = fl_mod.FLConfig(num_clients=10, clients_per_round=10,
-                              local_steps=12, method=method, prox_mu=mu,
-                              base_lr=0.05)
+        cfg = fl_mod.FLConfig(
+            num_clients=10,
+            clients_per_round=10,
+            local_steps=12,
+            method=method,
+            prox_mu=mu,
+            base_lr=0.05,
+        )
         server = FedServer("mlr", cfg, nodes, test, batch_size=50, seed=0)
         import time as _t
 
         t0 = _t.time()
         hist = server.run(rounds, target_acc=0.85, eval_every=2)
         spr = (_t.time() - t0) / max(len(hist.loss), 1)
-        emit(f"ablation/{method}/rounds_to_85",
-             spr * 1e6, hist.rounds_to_target or f">{rounds}")
+        emit(
+            f"ablation/{method}/rounds_to_85",
+            spr * 1e6,
+            hist.rounds_to_target or f">{rounds}",
+        )
 
 
 def kernel_micro(full: bool = False) -> None:
@@ -135,66 +151,117 @@ def kernel_micro(full: bool = False) -> None:
             jax.block_until_ready(fn(*args))
         return (time.time() - t0) / 3 * 1e6
 
-    emit("kernel/grad_dot/pallas_interp", timeit(grad_dot.grad_dot_stats, a, b),
-         f"n={n}")
-    emit("kernel/grad_dot/xla_ref", timeit(jax.jit(ref.grad_dot_stats), a, b),
-         f"n={n}")
-    emit("kernel/weighted_agg/pallas_interp",
-         timeit(weighted_agg.weighted_agg, w, x), f"shape={x.shape}")
-    emit("kernel/weighted_agg/xla_ref",
-         timeit(jax.jit(ref.weighted_agg), w, x), f"shape={x.shape}")
+    emit(
+        "kernel/grad_dot/pallas_interp",
+        timeit(grad_dot.grad_dot_stats, a, b),
+        f"n={n}",
+    )
+    emit(
+        "kernel/grad_dot/xla_ref",
+        timeit(jax.jit(ref.grad_dot_stats), a, b),
+        f"n={n}",
+    )
+    emit(
+        "kernel/weighted_agg/pallas_interp",
+        timeit(weighted_agg.weighted_agg, w, x),
+        f"shape={x.shape}",
+    )
+    emit(
+        "kernel/weighted_agg/xla_ref",
+        timeit(jax.jit(ref.weighted_agg), w, x),
+        f"shape={x.shape}",
+    )
     g = jax.random.normal(jax.random.key(4), (n // 8,), jnp.float32)
-    emit("kernel/round_stats/pallas_interp",
-         timeit(round_stats.round_stats, x, g), f"shape={x.shape}")
-    emit("kernel/round_stats/xla_ref",
-         timeit(jax.jit(ref.round_stats), x, g), f"shape={x.shape}")
+    emit(
+        "kernel/round_stats/pallas_interp",
+        timeit(round_stats.round_stats, x, g),
+        f"shape={x.shape}",
+    )
+    emit(
+        "kernel/round_stats/xla_ref",
+        timeit(jax.jit(ref.round_stats), x, g),
+        f"shape={x.shape}",
+    )
 
 
-def engine_ab(full: bool = False) -> None:
-    """Tree vs flat round-engine A/B: identical toy inputs, per-round wall
-    time for each engine plus the flat/tree ratio.
+def engine_ab(full: bool = False, tiny: bool = False) -> None:
+    """Tree vs flat round-engine A/B across a K sweep, plus the
+    client-sharded flat engine when more than one device is visible.
+
+    Sweeps K in {8, 32, 64, 128} (chunked kernels: K > 32 used to be a
+    trace-time error), times each engine per round, and writes the sweep
+    to BENCH_engine.json for the CI bench-smoke artifact. `tiny` shrinks
+    shapes for the interpret-mode CI smoke job.
 
     On CPU the flat path runs the Pallas kernels in interpret mode, so the
     ratio here measures the correctness path; the TPU projection lives in
     the roofline analysis."""
+    import json
+
     import jax
     import jax.numpy as jnp
 
     from repro.core import fl as fl_mod
     from repro.core.weighting import AngleState
 
-    K = 8
-    d = 1 << 16 if full else 1 << 14
+    ks = (4, 8) if tiny else (8, 32, 64, 128)
+    d = 1 << 10 if tiny else (1 << 16 if full else 1 << 14)
     tau, B = 2, 4
+    engines = ["tree", "flat"]
+    mesh = None
+    if jax.device_count() > 1:
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        engines.append("flat_sharded")
     rng = np.random.default_rng(0)
-    params = {"w": jnp.zeros((d, 1), jnp.float32),
-              "b": jnp.zeros((1,), jnp.float32)}
-    X = jnp.asarray(rng.normal(size=(K, tau, B, d)).astype(np.float32))
-    Y = jnp.asarray(rng.normal(size=(K, tau, B, 1)).astype(np.float32))
+    params = {"w": jnp.zeros((d, 1), jnp.float32), "b": jnp.zeros((1,), jnp.float32)}
 
     def loss_fn(p, batch):
         x, y = batch
         return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
 
-    sel = jnp.arange(K, dtype=jnp.int32)
-    sizes = jnp.ones((K,), jnp.float32)
-    us = {}
-    for engine in ("tree", "flat"):
-        cfg = fl_mod.FLConfig(num_clients=K, clients_per_round=K,
-                              local_steps=tau, method="fedadp",
-                              engine=engine, base_lr=0.05)
-        rf = jax.jit(fl_mod.make_round_fn(loss_fn, cfg))
-        state = AngleState.init(K)
-        prev = fl_mod.init_prev_delta(params)
-        args = (params, state, prev, (X, Y), sel, sizes, jnp.int32(0))
-        jax.block_until_ready(rf(*args))  # compile
-        t0 = time.time()
-        reps = 5
-        for _ in range(reps):
-            jax.block_until_ready(rf(*args))
-        us[engine] = (time.time() - t0) / reps * 1e6
-        emit(f"engine_ab/{engine}/round", us[engine], f"K={K} d={d}")
-    emit("engine_ab/flat_over_tree", 0.0, f"{us['flat'] / us['tree']:.3f}")
+    records = []
+    for K in ks:
+        X = jnp.asarray(rng.normal(size=(K, tau, B, d)).astype(np.float32))
+        Y = jnp.asarray(rng.normal(size=(K, tau, B, 1)).astype(np.float32))
+        sel = jnp.arange(K, dtype=jnp.int32)
+        sizes = jnp.ones((K,), jnp.float32)
+        us = {}
+        for engine in engines:
+            if engine == "flat_sharded" and K % jax.device_count():
+                continue
+            cfg = fl_mod.FLConfig(
+                num_clients=K,
+                clients_per_round=K,
+                local_steps=tau,
+                method="fedadp",
+                engine=engine,
+                base_lr=0.05,
+            )
+            rf = jax.jit(fl_mod.make_round_fn(loss_fn, cfg, mesh=mesh))
+            state = AngleState.init(K)
+            prev = fl_mod.init_prev_delta(params)
+            args = (params, state, prev, (X, Y), sel, sizes, jnp.int32(0))
+            jax.block_until_ready(rf(*args))  # compile
+            t0 = time.time()
+            reps = 5
+            for _ in range(reps):
+                jax.block_until_ready(rf(*args))
+            us[engine] = (time.time() - t0) / reps * 1e6
+            emit(f"engine_ab/K={K}/{engine}/round", us[engine], f"d={d}")
+            records.append(
+                {"K": K, "d": d, "engine": engine, "us_per_round": us[engine]}
+            )
+        emit(f"engine_ab/K={K}/flat_over_tree", 0.0, f"{us['flat'] / us['tree']:.3f}")
+    payload = {
+        "bench": "engine_ab",
+        "d": d,
+        "tiny": tiny,
+        "device_count": jax.device_count(),
+        "records": records,
+    }
+    with open("BENCH_engine.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("engine_ab/json", 0.0, "BENCH_engine.json")
 
 
 def roofline_table(full: bool = False) -> None:
@@ -203,8 +270,8 @@ def roofline_table(full: bool = False) -> None:
     import os
 
     # prefer the loop-aware records (scoped analysis + perf-iteration tags)
-    path = next((p for p in ("results/roofline.jsonl", "results/dryrun.jsonl")
-                 if os.path.exists(p)), None)
+    candidates = ("results/roofline.jsonl", "results/dryrun.jsonl")
+    path = next((p for p in candidates if os.path.exists(p)), None)
     if path is None:
         emit("roofline/skipped", 0.0, "run repro.launch.dryrun --all first")
         return
@@ -213,7 +280,8 @@ def roofline_table(full: bool = False) -> None:
     rows = roofline_rows(load_records(path))
     for r in rows:
         emit(
-            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            0.0,
             f"comp={r['t_compute']:.2e}s mem={r['t_memory']:.2e}s "
             f"coll={r['t_collective']:.2e}s dom={r['bottleneck']}",
         )
@@ -234,14 +302,17 @@ BENCHES = {
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    help="paper-scale settings (slow)")
+    ap.add_argument("--full", action="store_true", help="paper-scale settings (slow)")
+    ap.add_argument("--tiny", action="store_true", help="CI smoke shapes")
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for name in names:
-        BENCHES[name](full=args.full)
+        kwargs = {"full": args.full}
+        if name == "engine":
+            kwargs["tiny"] = args.tiny
+        BENCHES[name](**kwargs)
 
 
 if __name__ == "__main__":

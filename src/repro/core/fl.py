@@ -19,6 +19,12 @@ Two execution modes (DESIGN.md §6):
   measured against the *previous* round's aggregated delta (one-round
   staleness), restoring pass-1-only compute. Evaluated in EXPERIMENTS.md.
 
+Both modes compute their angle statistics through ONE implementation —
+the fused `kernels.round_stats` Pallas kernel (client-chunked, any K):
+parallel flat engines feed it the stacked (K, N) buffer (optionally
+client-row-sharded under shard_map), the sequential scan feeds it one
+(1, N) row per client.
+
 Angle convention: the paper defines θ_i between ∇F and ∇F_i with
 ∇F_i = -Δ_i/η (Alg. 1 l.9); the -1/η factors cancel in the cosine, so we
 correlate deltas directly.
@@ -31,7 +37,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import treemath, weighting
+from repro.core import fl_shard_map, treemath, weighting
 from repro.core.weighting import AngleState
 from repro.kernels import round_stats as round_stats_mod
 from repro.kernels import weighted_agg as weighted_agg_mod
@@ -52,11 +58,22 @@ class FLConfig:
     stale_angles: bool = False  # sequential one-pass variant
     # parallel-mode execution engine:
     #   "tree" — per-leaf treemath reductions (reference; keeps sharded
-    #            leaves sharded, the right trade on a mesh)
+    #            leaves sharded, the right trade on a model-sharded mesh)
     #   "flat" — deltas raveled once into a contiguous (K, N) f32 buffer;
     #            angle stats + aggregation run as single-HBM-pass Pallas
-    #            kernels (round_stats / weighted_agg)
-    engine: str = "tree"  # tree | flat
+    #            kernels (round_stats / weighted_agg). The client axis is
+    #            CHUNKED inside the kernels (<= kernels.weighted_agg.K_TILE
+    #            clients per VMEM tile), so any K is supported — there is
+    #            no MAX_K ceiling.
+    #   "flat_sharded" — the flat buffer row-sharded over the mesh client
+    #            axis ("pod","data"); per-shard kernel calls + psums via
+    #            fl_shard_map.make_flat_ops. Requires passing `mesh=` to
+    #            make_round_fn, and clients_per_round divisible by the
+    #            client-axis size.
+    # The sequential mode's pass-2 statistics also stream through the
+    # round_stats kernel (K=1 rows against the raveled global delta), so
+    # all modes share one stats implementation.
+    engine: str = "tree"  # tree | flat | flat_sharded
     # Pallas interpret mode for engine="flat": None = auto (interpret
     # everywhere except a real TPU backend), or force True/False.
     interpret: Optional[bool] = None
@@ -134,14 +151,6 @@ def moe_dense_only_pred(keys, leaf) -> bool:
     )
 
 
-def _client_stats(delta_i, g_ref, sqg, mask=None):
-    if mask is not None:
-        delta_i, g_ref = mask(delta_i), mask(g_ref)
-    dot = treemath.tree_dot(delta_i, g_ref)
-    sq = treemath.tree_sqnorm(delta_i)
-    return weighting.instantaneous_angle(dot, sq, sqg), dot, sq
-
-
 def _scatter_angles(state: AngleState, sel_idx, theta):
     n = state.smoothed.shape[0]
     mask = jnp.zeros((n,), bool).at[sel_idx].set(True)
@@ -152,7 +161,8 @@ def _scatter_angles(state: AngleState, sel_idx, theta):
 def make_round_fn(loss_fn: Callable, fl: FLConfig,
                   delta_constraint: Optional[Callable] = None,
                   angle_pred: Optional[Callable] = None,
-                  grad_constraint: Optional[Callable] = None) -> Callable:
+                  grad_constraint: Optional[Callable] = None,
+                  mesh=None) -> Callable:
     """Build the jit-able federated round.
 
     round_fn(params, angle_state, prev_delta, batches, sel_idx,
@@ -163,7 +173,9 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
     data_sizes (K,) f32. `prev_delta` is used only by stale_angles (pass
     zeros-like(params) otherwise; it is threaded through untouched).
     `delta_constraint` optionally applies sharding constraints to the
-    stacked deltas (parallel mode).
+    stacked deltas (parallel mode). `mesh` is required by
+    engine="flat_sharded" (the client axis of the flat buffer is sharded
+    over the mesh's ("pod","data") axes) and ignored otherwise.
 
     When `angle_pred` is None, `fl.angle_filter` selects a built-in
     predicate ("dense_only" -> `moe_dense_only_pred`); an explicit
@@ -173,21 +185,28 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
         raise ValueError(f"unknown angle_filter {fl.angle_filter!r}")
     if angle_pred is None and fl.angle_filter == "dense_only":
         angle_pred = moe_dense_only_pred
-    if fl.engine not in ("tree", "flat"):
+    if fl.engine not in ("tree", "flat", "flat_sharded"):
         raise ValueError(f"unknown engine {fl.engine!r}")
-    if fl.engine == "flat" and fl.clients_per_round > round_stats_mod.MAX_K:
-        raise ValueError(
-            f"engine='flat' tiles the whole client axis into VMEM and "
-            f"supports at most K={round_stats_mod.MAX_K} clients per round "
-            f"(got {fl.clients_per_round}); use engine='tree'")
+    if fl.engine == "flat_sharded":
+        if mesh is None:
+            raise ValueError(
+                "engine='flat_sharded' shards the (K, N) delta buffer over "
+                "the mesh client axis; pass mesh= to make_round_fn")
+        csize = fl_shard_map.client_axis_size(mesh)
+        if fl.clients_per_round % csize:
+            raise ValueError(
+                f"engine='flat_sharded' needs clients_per_round divisible "
+                f"by the client-axis size (K={fl.clients_per_round}, "
+                f"client axis {csize})")
     if fl.mode == "parallel":
         return _make_parallel_round(loss_fn, fl, delta_constraint, angle_pred,
-                                    grad_constraint)
+                                    grad_constraint, mesh)
     if fl.mode == "sequential":
-        if fl.engine == "flat":
+        if fl.engine != "tree":
             raise ValueError(
-                "engine='flat' requires mode='parallel' (sequential mode "
-                "never materializes the stacked (K, N) delta buffer)")
+                f"engine={fl.engine!r} requires mode='parallel' (sequential "
+                "mode never materializes the stacked (K, N) delta buffer; "
+                "its stats already stream through round_stats)")
         return _make_sequential_round(loss_fn, fl, angle_pred, grad_constraint)
     raise ValueError(fl.mode)
 
@@ -203,7 +222,13 @@ def _resolve_interpret(fl: FLConfig) -> bool:
 
 
 def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=None,
-                         grad_constraint=None):
+                         grad_constraint=None, mesh=None):
+    flat_ops = None
+    if fl.engine == "flat_sharded":
+        flat_ops = fl_shard_map.make_flat_ops(
+            mesh, interpret=_resolve_interpret(fl))
+        row_sharding = fl_shard_map.flat_client_sharding(mesh)
+
     def round_fn(params, angle_state: AngleState, prev_delta, batches,
                  sel_idx, data_sizes, round_idx):
         lr = _lr_at(fl, round_idx)
@@ -216,20 +241,31 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
 
         psi_avg = weighting.fedavg_weights(data_sizes)
 
-        if fl.engine == "flat":
+        if fl.engine in ("flat", "flat_sharded"):
             # single (K, N) ravel; stats + both aggregations are fused
-            # single-HBM-pass kernels over the contiguous buffer.
+            # single-HBM-pass kernels over the contiguous buffer (chunked
+            # over the client axis, so any K fits the VMEM envelope).
             interpret = _resolve_interpret(fl)
-            flat, unravel = treemath.tree_ravel_stacked(deltas)
-            g_flat = weighted_agg_mod.weighted_agg(psi_avg, flat,
-                                                   interpret=interpret)
             maskv = (
                 treemath.segment_mask(params,
                                       angle_keep_list(params, angle_pred))
                 if angle_pred else None
             )
-            dots, sqs, sqg = round_stats_mod.round_stats(
-                flat, g_flat, maskv, interpret=interpret)
+            if fl.engine == "flat_sharded":
+                # rows sharded over ("pod","data"): per-shard kernel calls
+                # + a psum of the partial dots/sqnorms and aggregates.
+                stats_fn, agg_fn = flat_ops
+                flat, unravel = treemath.tree_ravel_stacked(deltas,
+                                                            row_sharding)
+                mvec = (maskv if maskv is not None
+                        else jnp.ones((flat.shape[1],), jnp.float32))
+                g_flat, dots, sqs, sqg = stats_fn(flat, psi_avg, mvec)
+            else:
+                flat, unravel = treemath.tree_ravel_stacked(deltas)
+                g_flat = weighted_agg_mod.weighted_agg(psi_avg, flat,
+                                                       interpret=interpret)
+                dots, sqs, sqg = round_stats_mod.round_stats(
+                    flat, g_flat, maskv, interpret=interpret)
             g_avg = unravel(g_flat, jnp.float32)
         else:
             angle_mask = (build_angle_mask(params, angle_pred)
@@ -251,12 +287,16 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             w = weighting.fedadp_weights(theta_sm, data_sizes, fl.alpha)
         else:  # fedavg / fedprox aggregate by data size
             w = psi_avg
-        if fl.engine == "flat":
+        if fl.engine in ("flat", "flat_sharded"):
             # fedavg/fedprox aggregate with w == psi_avg: reuse g_flat rather
             # than re-streaming the (K, N) buffer (Pallas calls aren't CSE'd)
-            delta_flat = (g_flat if fl.method != "fedadp" else
-                          weighted_agg_mod.weighted_agg(w, flat,
-                                                        interpret=interpret))
+            if fl.method != "fedadp":
+                delta_flat = g_flat
+            elif fl.engine == "flat_sharded":
+                delta_flat = agg_fn(flat, w)
+            else:
+                delta_flat = weighted_agg_mod.weighted_agg(
+                    w, flat, interpret=interpret)
             delta = unravel(delta_flat)
         else:
             delta = treemath.tree_weighted_sum(deltas, w)
@@ -280,7 +320,14 @@ def _make_sequential_round(loss_fn, fl: FLConfig, angle_pred=None,
     def round_fn(params, angle_state: AngleState, prev_delta, batches,
                  sel_idx, data_sizes, round_idx):
         lr = _lr_at(fl, round_idx)
-        angle_mask = build_angle_mask(params, angle_pred) if angle_pred else None
+        interpret = _resolve_interpret(fl)
+        # one stats implementation across modes: pass-2 statistics stream
+        # through the round_stats kernel as a single-row (1, N) buffer per
+        # scan step, with the MoE angle filter as a flat segment mask.
+        maskv = (
+            treemath.segment_mask(params, angle_keep_list(params, angle_pred))
+            if angle_pred else None
+        )
         psi_avg = data_sizes / jnp.sum(data_sizes)
         zeros32 = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params
@@ -300,7 +347,7 @@ def _make_sequential_round(loss_fn, fl: FLConfig, angle_pred=None,
             g_ref = prev_delta
             losses = None
 
-        sqg = treemath.tree_sqnorm(angle_mask(g_ref) if angle_mask else g_ref)
+        g_flat, _ = treemath.tree_ravel(g_ref)
 
         # ---- pass 2 (or single stale pass): stats + online weighted sum ----
         def p2(carry, xs):
@@ -308,7 +355,11 @@ def _make_sequential_round(loss_fn, fl: FLConfig, angle_pred=None,
             b_i, psi_i, D_i, idx_i = xs
             d_i, loss = local_update(loss_fn, params, b_i, lr, fl.prox_mu,
                                      grad_constraint)
-            theta_i, dot, sq = _client_stats(d_i, g_ref, sqg, angle_mask)
+            d_flat, _ = treemath.tree_ravel(d_i)
+            dots_i, sqs_i, sqg_i = round_stats_mod.round_stats(
+                d_flat[None], g_flat, maskv, interpret=interpret)
+            dot, sq = dots_i[0], sqs_i[0]
+            theta_i = weighting.instantaneous_angle(dot, sq, sqg_i)
             cnt = angle_state.count[idx_i].astype(jnp.float32) + 1.0
             sm = ((cnt - 1.0) * angle_state.smoothed[idx_i] + theta_i) / cnt
             if fl.method == "fedadp":
@@ -317,13 +368,13 @@ def _make_sequential_round(loss_fn, fl: FLConfig, angle_pred=None,
                 w_i = D_i
             num = treemath.tree_axpy(w_i, d_i, num)
             g_acc = treemath.tree_axpy(psi_i, d_i, g_acc)
-            return (num, den + w_i, g_acc), (theta_i, sm, dot, sq, loss)
+            return (num, den + w_i, g_acc), (theta_i, sm, dot, sq, sqg_i, loss)
 
         (num, den, g_acc), ys = jax.lax.scan(
             p2, (zeros32, jnp.zeros((), jnp.float32), zeros32),
             (batches, psi_avg, data_sizes.astype(jnp.float32), sel_idx),
         )
-        theta, theta_sm, dots, sqs, losses2 = ys
+        theta, theta_sm, dots, sqs, sqgs, losses2 = ys
         delta = treemath.tree_scale(num, 1.0 / jnp.maximum(den, 1e-12))
         new_params = jax.tree.map(
             lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype), params, delta
@@ -334,7 +385,7 @@ def _make_sequential_round(loss_fn, fl: FLConfig, angle_pred=None,
             if fl.method == "fedadp"
             else psi_avg
         )
-        div = jnp.mean(jnp.sqrt(jnp.maximum(sqs - 2 * dots + sqg, 0.0))) / lr
+        div = jnp.mean(jnp.sqrt(jnp.maximum(sqs - 2 * dots + sqgs, 0.0))) / lr
         metrics = {
             "loss": jnp.mean(losses if losses is not None else losses2),
             "theta": theta, "theta_smoothed": theta_sm, "weights": w,

@@ -14,6 +14,22 @@ communication pattern auditable and lets §Perf reason about it directly:
 Exactly two client-axis tree reductions (1)(4) plus O(K) scalar psums (2)
 per round — the minimum the algorithm admits with exact same-round angles.
 
+Two engines share this schedule:
+
+* ``engine="tree"`` (reference) — per-leaf reductions; tensor dims may be
+  sharded over the model axes, so big-model leaves stay sharded.
+* ``engine="flat"`` — the stacked deltas are raveled once into a (K, N)
+  f32 buffer row-sharded over the client axis ("pod","data"); steps
+  (1)(2)(4) run as the fused Pallas kernels (`kernels.weighted_agg`,
+  `kernels.round_stats`) on each shard's rows, followed by the same psums.
+  This is the scalable large-cohort path: per-device work is one HBM pass
+  over K/num_shards rows regardless of K. It requires client-only
+  sharding (each client's delta row is contiguous on its shard).
+
+`make_flat_ops` exposes the flat per-shard kernel + psum building blocks;
+core/fl.py's `engine="flat_sharded"` round path reuses them so the pjit
+and shard_map stacks aggregate through literally the same kernels.
+
 Works on any mesh whose client axis is "data" (+"pod") and whose tensor
 axes follow models/sharding.param_pspecs; on a 1x1 host mesh it reduces to
 plain math (used by the CPU equivalence test).
@@ -25,29 +41,128 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import weighting
+from repro.core import treemath, weighting
+from repro.kernels import round_stats as round_stats_mod
+from repro.kernels import weighted_agg as weighted_agg_mod
 
 PyTree = Any
 
 
 def _client_axes(mesh: Mesh):
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    caxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not caxes:
+        raise ValueError(
+            f"mesh axes {mesh.axis_names} contain no client axis — the "
+            "FedAdp client dimension shards over ('pod', 'data')")
+    return caxes
+
+
+def client_axis_size(mesh: Mesh) -> int:
+    size = 1
+    for a in _client_axes(mesh):
+        size *= mesh.shape[a]
+    return size
+
+
+def flat_client_sharding(mesh: Mesh) -> NamedSharding:
+    """Row sharding for the (K, N) flat delta buffer: K over ("pod","data")."""
+    caxes = _client_axes(mesh)
+    return NamedSharding(mesh, P(caxes if len(caxes) > 1 else caxes[0]))
+
+
+def _shard_map(body, mesh: Mesh, in_specs, out_specs):
+    """shard_map across jax versions (check_vma / check_rep spelling)."""
+    try:
+        smap = jax.shard_map
+    except AttributeError:  # older jax
+        from jax.experimental.shard_map import shard_map as smap
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return smap(body, check_vma=False, **kw)
+    except TypeError:  # jax < 0.6 spells it check_rep
+        return smap(body, check_rep=False, **kw)
+
+
+def make_flat_ops(mesh: Mesh, *, interpret: bool = True):
+    """Client-sharded kernel ops over a (K, N) flat delta buffer.
+
+    Returns (stats, agg) — both shard_map'd over the mesh client axis, with
+    the buffer row-sharded (`flat_client_sharding`) and everything else
+    replicated. K must be divisible by the client-axis size.
+
+      stats(flat, psi, mask) -> (g_flat, dots, sqs, sqg):
+        one per-shard `weighted_agg` for the psi-weighted global delta
+        (psum over clients), then one per-shard `round_stats` pass against
+        the replicated g; partial dots/sqnorms are scattered into (K,)
+        and psum'd. mask is a REQUIRED (N,) f32 vector — pass ones for
+        unfiltered stats (multiplying by 1.0 is exact in f32, so the
+        result is bit-identical to the unmasked kernel).
+
+      agg(flat, w) -> (N,): psum over clients of per-shard `weighted_agg`.
+    """
+    caxes = _client_axes(mesh)
+    caxis = caxes if len(caxes) > 1 else caxes[0]
+    row_spec = P(caxis)
+
+    def _slots(flat):
+        k_loc = flat.shape[0]
+        return jax.lax.axis_index(caxis) * k_loc + jnp.arange(k_loc)
+
+    def _stats_body(flat, psi, mask):
+        my = _slots(flat)
+        g_part = weighted_agg_mod.weighted_agg(psi[my], flat,
+                                               interpret=interpret)
+        g_flat = jax.lax.psum(g_part, caxis)
+        d_loc, s_loc, sqg = round_stats_mod.round_stats(
+            flat, g_flat, mask, interpret=interpret)
+        k = psi.shape[0]
+        dots = jax.lax.psum(
+            jnp.zeros((k,), jnp.float32).at[my].set(d_loc), caxis)
+        sqs = jax.lax.psum(
+            jnp.zeros((k,), jnp.float32).at[my].set(s_loc), caxis)
+        # g_flat is replicated post-psum, so sqg agrees across shards.
+        return g_flat, dots, sqs, sqg
+
+    def _agg_body(flat, w):
+        part = weighted_agg_mod.weighted_agg(w[_slots(flat)], flat,
+                                             interpret=interpret)
+        return jax.lax.psum(part, caxis)
+
+    stats = _shard_map(_stats_body, mesh, in_specs=(row_spec, P(), P()),
+                       out_specs=(P(), P(), P(), P()))
+    agg = _shard_map(_agg_body, mesh, in_specs=(row_spec, P()),
+                     out_specs=P())
+    return stats, agg
 
 
 def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
-                     method: str = "fedadp"):
+                     method: str = "fedadp", engine: str = "tree",
+                     interpret: bool = True):
     """Build an aggregation fn over K-stacked deltas.
 
     delta_pspecs: PartitionSpec tree for the STACKED deltas — leading axis
     = client axis over ("pod","data"), remaining dims per param sharding.
 
+    engine="tree" (reference) runs per-leaf reductions and supports
+    model-axis-sharded leaves; engine="flat" ravels the stacked tree into a
+    client-row-sharded (K, N) buffer and runs the fused Pallas kernels per
+    shard (`make_flat_ops`) — it requires client-only sharding and is the
+    large-cohort fast path. `interpret` is the Pallas interpret switch for
+    the flat engine (True off-TPU).
+
     Returns agg(deltas, data_sizes, smoothed_prev, count_prev) ->
       (weighted_delta, theta, theta_smoothed, weights); weighted_delta is
-      sharded like one param tree. smoothed/count are the selected clients'
-      angle-state slots (Eq. 9 is applied inside, matching core.fl).
+      sharded like one param tree (tree engine) or replicated f32 (flat
+      engine). smoothed/count are the selected clients' angle-state slots
+      (Eq. 9 is applied inside, matching core.fl).
     """
+    if engine == "flat":
+        return _fedadp_aggregate_flat(mesh, delta_pspecs, alpha=alpha,
+                                      method=method, interpret=interpret)
+    if engine != "tree":
+        raise ValueError(f"unknown engine {engine!r}")
     caxes = _client_axes(mesh)
     caxis = caxes if len(caxes) > 1 else caxes[0]
 
@@ -136,12 +251,48 @@ def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
     )
     in_specs = (tree_of(spec_leaves), P(), P(), P())
     out_specs = (tree_of(out_specs_leaves), P(), P(), P())
-    try:
-        smap = jax.shard_map
-    except AttributeError:  # older jax
-        from jax.experimental.shard_map import shard_map as smap
-    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    try:
-        return smap(body, check_vma=False, **kw)
-    except TypeError:  # jax < 0.6 spells it check_rep
-        return smap(body, check_rep=False, **kw)
+    return _shard_map(body, mesh, in_specs, out_specs)
+
+
+def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
+                           method: str, interpret: bool):
+    """The flat engine behind `fedadp_aggregate(engine="flat")`.
+
+    Same collective schedule as the tree engine — (1) psi-weighted psum,
+    (2) per-client stat psums, (3) replicated weighting, (4) weighted psum
+    — but each shard's contribution streams through the fused kernels over
+    its contiguous (K_loc, N) rows.
+    """
+    spec_leaves = jax.tree.leaves(delta_pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+    for s in spec_leaves:
+        if any(e is not None for e in tuple(s)[1:]):
+            raise ValueError(
+                "engine='flat' ravels each client's delta into one "
+                f"contiguous row and requires client-only sharding; got {s} "
+                "(use engine='tree' for model-axis-sharded leaves)")
+    stats, agg = make_flat_ops(mesh, interpret=interpret)
+    row_sharding = flat_client_sharding(mesh)
+
+    def body(deltas, data_sizes, smoothed_prev, count_prev):
+        k = data_sizes.shape[0]
+        csize = client_axis_size(mesh)
+        if k % csize:
+            raise ValueError(
+                f"engine='flat' needs K divisible by the client-axis size "
+                f"(K={k}, client axis {csize}); pad the cohort or use "
+                "engine='tree'")
+        flat, unravel = treemath.tree_ravel_stacked(deltas, row_sharding)
+        psi_avg = weighting.fedavg_weights(data_sizes)
+        ones = jnp.ones((flat.shape[1],), jnp.float32)
+        _, dots, sqs, sqg = stats(flat, psi_avg, ones)
+        theta = weighting.instantaneous_angle(dots, sqs, sqg)
+        cnt = count_prev.astype(jnp.float32) + 1.0
+        theta_sm = ((cnt - 1.0) * smoothed_prev + theta) / cnt  # Eq. 9
+        if method == "fedadp":
+            w = weighting.fedadp_weights(theta_sm, data_sizes, alpha)
+        else:
+            w = psi_avg
+        return unravel(agg(flat, w), jnp.float32), theta, theta_sm, w
+
+    return body

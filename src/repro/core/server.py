@@ -42,10 +42,13 @@ class FedServer:
         batch_size: int,
         seed: int = 0,
         angle_pred: Optional[Callable] = None,
+        mesh=None,
     ):
-        # fl.engine selects the round execution path ("tree" reference vs
-        # the flat-buffer Pallas path) and fl.angle_filter the built-in
-        # angle predicate; both flow through make_round_fn unchanged.
+        # fl.engine selects the round execution path ("tree" reference,
+        # the flat-buffer Pallas path, or the client-sharded
+        # "flat_sharded" variant — the latter needs `mesh`) and
+        # fl.angle_filter the built-in angle predicate; all flow through
+        # make_round_fn unchanged.
         self.fl = fl
         self.nodes = nodes
         self.test = test
@@ -59,7 +62,8 @@ class FedServer:
             return small.classification_loss(self.apply_fn, params, x, y)
 
         self.round_fn = jax.jit(
-            fl_mod.make_round_fn(loss_fn, fl, angle_pred=angle_pred))
+            fl_mod.make_round_fn(loss_fn, fl, angle_pred=angle_pred,
+                                 mesh=mesh))
         self.angle_state = AngleState.init(fl.num_clients)
         self.prev_delta = fl_mod.init_prev_delta(self.params)
         self.round = 0

@@ -180,12 +180,18 @@ def tree_ravel(tree: PyTree) -> tuple[jax.Array, Callable]:
     return vec, _cached_unravel(treedef, shapes, dtypes)
 
 
-def tree_ravel_stacked(stacked: PyTree) -> tuple[jax.Array, Callable]:
+def tree_ravel_stacked(stacked: PyTree,
+                       sharding=None) -> tuple[jax.Array, Callable]:
     """Flatten a K-stacked pytree (leaves (K, ...)) into a (K, N) f32 buffer.
 
     Returns (buf, unravel). unravel maps an (N,) vector back to ONE
     unstacked tree — leaf shapes without the K axis, original dtypes — so
     the aggregated flat delta lands directly in parameter structure.
+
+    `sharding` (a NamedSharding, typically row-sharded over the mesh client
+    axis ("pod","data")) pins the buffer's layout via
+    with_sharding_constraint — the client-sharded flat engine feeds each
+    shard's rows to per-shard kernels, so GSPMD must not all-gather here.
     """
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
     k = leaves[0].shape[0]
@@ -194,6 +200,8 @@ def tree_ravel_stacked(stacked: PyTree) -> tuple[jax.Array, Callable]:
     buf = jnp.concatenate(
         [l.reshape(k, -1).astype(jnp.float32) for l in leaves], axis=1
     )
+    if sharding is not None:
+        buf = jax.lax.with_sharding_constraint(buf, sharding)
     return buf, _cached_unravel(treedef, shapes, dtypes)
 
 

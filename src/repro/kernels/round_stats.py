@@ -6,16 +6,22 @@ FedAdp's contribution measurement (paper Eqs. 8-11) needs, per round:
   sqg     = ||g||^2     — the global-gradient squared norm
 over the flat (K, N) client-delta buffer x and the (N,) global delta g.
 Computed separately (`batched_dot` + K sqnorm reductions + one sqnorm)
-that is three HBM passes over x; this kernel streams each (K, ROWS, 128)
-tile through VMEM once and emits all 2K+1 statistics — a single HBM pass.
+that is three HBM passes over x; this kernel streams each (K_TILE, ROWS,
+128) tile through VMEM once and emits all 2K+1 statistics — a single HBM
+pass over x.
+
+The client axis is chunked like `weighted_agg`: the grid is (client
+chunks, lane tiles) with the lane dimension minor, so each chunk's
+(K_TILE, 1) output blocks accumulate across consecutive lane steps, and
+sqg accumulates only on the first chunk (g is re-streamed per chunk but
+must be counted once). Any K is served; the former trace-time MAX_K
+rejection is gone.
 
 An optional (N,) 0/1 segment mask restricts the statistics to a leaf
 subset (the `angle_filter="dense_only"` MoE filter) without materializing
 masked copies of x or g: the mask tile rides along and is applied in-VMEM.
 
-Grid steps of the sequential dimension run in order on one TPU core, so
-the small output blocks act as accumulators across steps (same pattern as
-`grad_dot.py`). `interpret=True` runs the identical kernel body on CPU.
+`interpret=True` runs the identical kernel body on CPU.
 """
 from __future__ import annotations
 
@@ -25,31 +31,50 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# tile geometry and the K budget derived from it are shared with
-# weighted_agg — the (K, ROWS, LANE) x-tile here must fit the same VMEM
-# envelope check_k enforces.
-from repro.kernels.weighted_agg import LANE, MAX_K, ROWS, check_k
+# tile geometry and client-chunk size are shared with weighted_agg — the
+# (K_TILE, ROWS, LANE) x-tile here fits the same VMEM envelope.
+from repro.kernels.weighted_agg import (
+    K_TILE,  # noqa: F401  (re-exported: callers size shards against it)
+    LANE,
+    ROWS,
+    _k_chunks,
+    _pad_axis0,
+    _pad_lanes,
+)
 
 
 def _stats_kernel(x_ref, g_ref, dots_ref, sqs_ref, sqg_ref):
-    @pl.when(pl.program_id(0) == 0)
+    kc, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
     def _init():
         dots_ref[...] = jnp.zeros_like(dots_ref)
         sqs_ref[...] = jnp.zeros_like(sqs_ref)
+
+    @pl.when((kc == 0) & (i == 0))
+    def _init_g():
         sqg_ref[0, 0] = 0.0
 
-    x = x_ref[...].astype(jnp.float32)  # (K, ROWS, LANE)
+    x = x_ref[...].astype(jnp.float32)  # (KT, ROWS, LANE)
     g = g_ref[...].astype(jnp.float32)  # (ROWS, LANE)
     dots_ref[...] += jnp.sum(x * g[None], axis=(1, 2))[:, None]
     sqs_ref[...] += jnp.sum(x * x, axis=(1, 2))[:, None]
-    sqg_ref[0, 0] += jnp.sum(g * g)
+
+    @pl.when(kc == 0)  # g repeats per client chunk; count it once
+    def _accum_g():
+        sqg_ref[0, 0] += jnp.sum(g * g)
 
 
 def _stats_kernel_masked(x_ref, g_ref, m_ref, dots_ref, sqs_ref, sqg_ref):
-    @pl.when(pl.program_id(0) == 0)
+    kc, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
     def _init():
         dots_ref[...] = jnp.zeros_like(dots_ref)
         sqs_ref[...] = jnp.zeros_like(sqs_ref)
+
+    @pl.when((kc == 0) & (i == 0))
+    def _init_g():
         sqg_ref[0, 0] = 0.0
 
     m = m_ref[...].astype(jnp.float32)  # (ROWS, LANE) in {0, 1}
@@ -57,7 +82,10 @@ def _stats_kernel_masked(x_ref, g_ref, m_ref, dots_ref, sqs_ref, sqg_ref):
     g = g_ref[...].astype(jnp.float32) * m
     dots_ref[...] += jnp.sum(x * g[None], axis=(1, 2))[:, None]
     sqs_ref[...] += jnp.sum(x * x, axis=(1, 2))[:, None]
-    sqg_ref[0, 0] += jnp.sum(g * g)
+
+    @pl.when(kc == 0)
+    def _accum_g():
+        sqg_ref[0, 0] += jnp.sum(g * g)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -67,23 +95,25 @@ def round_stats(x: jax.Array, g: jax.Array, mask: jax.Array | None = None,
 
     mask, if given, is an (N,) 0/1 vector; statistics are computed over the
     masked subspace (mask is idempotent, so only one multiply per operand).
-    Accumulates in f32 regardless of input dtype.
+    Accumulates in f32 regardless of input dtype. Any K: the client axis is
+    zero-padded to a chunk multiple and gridded (zero rows add zero stats).
     """
     K, n = x.shape
-    check_k(K)
+    tile, kp = _k_chunks(K)
     block = ROWS * LANE
-    pad = (-n) % block
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((K, pad), x.dtype)], axis=1)
-        g = jnp.concatenate([g, jnp.zeros((pad,), g.dtype)])
-        if mask is not None:
-            mask = jnp.concatenate([mask, jnp.zeros((pad,), mask.dtype)])
+    x = _pad_axis0(_pad_lanes(x, block), kp)
+    g = _pad_lanes(g, block)
+    if mask is not None:
+        mask = _pad_lanes(mask, block)
     m = x.shape[1] // LANE
-    x3 = x.reshape(K, m, LANE)
+    x3 = x.reshape(kp, m, LANE)
     g2 = g.reshape(m, LANE)
 
-    tile_spec = pl.BlockSpec((ROWS, LANE), lambda i: (i, 0))
-    in_specs = [pl.BlockSpec((K, ROWS, LANE), lambda i: (0, i, 0)), tile_spec]
+    tile_spec = pl.BlockSpec((ROWS, LANE), lambda kc, i: (i, 0))
+    in_specs = [
+        pl.BlockSpec((tile, ROWS, LANE), lambda kc, i: (kc, i, 0)),
+        tile_spec,
+    ]
     operands = [x3, g2]
     kernel = _stats_kernel
     if mask is not None:
@@ -91,17 +121,18 @@ def round_stats(x: jax.Array, g: jax.Array, mask: jax.Array | None = None,
         operands.append(mask.reshape(m, LANE))
         kernel = _stats_kernel_masked
 
-    kvec_spec = pl.BlockSpec((K, 1), lambda i: (0, 0))
+    kvec_spec = pl.BlockSpec((tile, 1), lambda kc, i: (kc, 0))
     dots, sqs, sqg = pl.pallas_call(
         kernel,
-        grid=(m // ROWS,),
+        grid=(kp // tile, m // ROWS),
         in_specs=in_specs,
-        out_specs=(kvec_spec, kvec_spec, pl.BlockSpec((1, 1), lambda i: (0, 0))),
+        out_specs=(kvec_spec, kvec_spec,
+                   pl.BlockSpec((1, 1), lambda kc, i: (0, 0))),
         out_shape=(
-            jax.ShapeDtypeStruct((K, 1), jnp.float32),
-            jax.ShapeDtypeStruct((K, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ),
         interpret=interpret,
     )(*operands)
-    return dots[:, 0], sqs[:, 0], sqg[0, 0]
+    return dots[:K, 0], sqs[:K, 0], sqg[0, 0]

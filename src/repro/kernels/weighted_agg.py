@@ -2,8 +2,15 @@
 
 FedAdp's global update is y = sum_k w_k * x_k over K client deltas
 (Eq. 4/11). A naive implementation is K scaled-add passes (K reads of y);
-this kernel streams each (K, ROWS, 128) tile through VMEM once and writes
-y once — a single HBM pass over the stacked deltas.
+this kernel streams (K_TILE, ROWS, 128) tiles through VMEM and writes
+each y tile once — a single HBM pass over the stacked deltas.
+
+The client axis is CHUNKED, not whole-K tiled: the grid walks
+ceil(K / K_TILE) client chunks per output tile and accumulates partial
+sums into the revisited f32 output block (sequential grid steps run in
+order on one TPU core, so revisited output blocks act as accumulators —
+same pattern as `grad_dot.py`). Any K is served with a bounded VMEM
+envelope; the former trace-time MAX_K rejection is gone.
 
 Also provides `batched_dot`: u_k = <x_k, g> for all K clients in one pass
 (the per-client angle numerators), sharing the same tiling.
@@ -17,60 +24,81 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANE = 128
-ROWS = 128  # per-client block: 128*128*4 B = 64 KiB; K<=32 -> <=2 MiB VMEM
-# These kernels tile the WHOLE client axis into one VMEM block; past this
-# the x tile crowds out double-buffering on a ~16 MiB core. Enforced at
-# trace time (K is static) so TPU callers get a ValueError, not an opaque
-# Mosaic compile failure.
-MAX_K = 32
+ROWS = 128  # per-client block: 128*128*4 B = 64 KiB
+# Client-axis chunk: 32*128*128*4 B = 2 MiB per x tile — small enough to
+# leave VMEM room for double buffering on a ~16 MiB core. K <= K_TILE runs
+# as one chunk of size K; larger K is zero-padded to a K_TILE multiple and
+# gridded. NOTE: the zero-pad is a jnp.concatenate, i.e. one buffer copy
+# whenever K % K_TILE != 0 — keep cohorts at multiples of 32 on the hot
+# path (a tail-chunk call to avoid the copy is a ROADMAP next step).
+K_TILE = 32
 
 
-def check_k(k: int) -> None:
-    if k > MAX_K:
-        raise ValueError(
-            f"K={k} exceeds MAX_K={MAX_K} for whole-K VMEM tiling; shard "
-            f"the client axis or use the tree engine")
+def _k_chunks(k: int) -> tuple[int, int]:
+    """(chunk size, padded K) for gridding the client axis."""
+    tile = min(k, K_TILE)
+    return tile, ((k + tile - 1) // tile) * tile
+
+
+def _pad_axis0(x: jax.Array, kp: int) -> jax.Array:
+    """Zero-pad axis 0 to kp rows (zero clients contribute zero stats)."""
+    k = x.shape[0]
+    if kp == k:
+        return x
+    return jnp.concatenate([x, jnp.zeros((kp - k,) + x.shape[1:], x.dtype)])
+
+
+def _pad_lanes(x: jax.Array, block: int) -> jax.Array:
+    """Zero-pad the last axis to a multiple of `block`."""
+    pad = (-x.shape[-1]) % block
+    if not pad:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)
 
 
 def _agg_kernel(w_ref, x_ref, y_ref):
-    w = w_ref[...].astype(jnp.float32)  # (K, 1)
-    x = x_ref[...].astype(jnp.float32)  # (K, ROWS, LANE)
-    y_ref[...] = jnp.sum(w[:, :, None] * x, axis=0).astype(y_ref.dtype)
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    w = w_ref[...].astype(jnp.float32)  # (KT, 1)
+    x = x_ref[...].astype(jnp.float32)  # (KT, ROWS, LANE)
+    y_ref[...] += jnp.sum(w[:, :, None] * x, axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def weighted_agg(w: jax.Array, x: jax.Array, *, interpret: bool = True):
     """y[n] = sum_k w[k] x[k, n]. x: (K, N) any float dtype; f32 accumulate."""
     K, n = x.shape
-    check_k(K)
-    block = ROWS * LANE
-    pad = (-n) % block
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((K, pad), x.dtype)], axis=1)
+    tile, kp = _k_chunks(K)
+    x = _pad_axis0(_pad_lanes(x, ROWS * LANE), kp)
     m = x.shape[1] // LANE
-    x3 = x.reshape(K, m, LANE)
-    w2 = w.reshape(K, 1).astype(jnp.float32)
+    x3 = x.reshape(kp, m, LANE)
+    w2 = _pad_axis0(w.reshape(K).astype(jnp.float32), kp).reshape(kp, 1)
 
+    # grid order: client chunks are the MINOR dimension, so each output
+    # tile is revisited across consecutive steps while kc accumulates.
     y = pl.pallas_call(
         _agg_kernel,
-        grid=(m // ROWS,),
+        grid=(m // ROWS, kp // tile),
         in_specs=[
-            pl.BlockSpec((K, 1), lambda i: (0, 0)),
-            pl.BlockSpec((K, ROWS, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((tile, 1), lambda i, kc: (kc, 0)),
+            pl.BlockSpec((tile, ROWS, LANE), lambda i, kc: (kc, i, 0)),
         ],
-        out_specs=pl.BlockSpec((ROWS, LANE), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, LANE), x.dtype),
+        out_specs=pl.BlockSpec((ROWS, LANE), lambda i, kc: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, LANE), jnp.float32),
         interpret=interpret,
     )(w2, x3)
-    return y.reshape(-1)[:n]
+    return y.reshape(-1)[:n].astype(x.dtype)
 
 
 def _bdot_kernel(x_ref, g_ref, out_ref):
-    @pl.when(pl.program_id(0) == 0)
+    @pl.when(pl.program_id(1) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    x = x_ref[...].astype(jnp.float32)  # (K, ROWS, LANE)
+    x = x_ref[...].astype(jnp.float32)  # (KT, ROWS, LANE)
     g = g_ref[...].astype(jnp.float32)  # (ROWS, LANE)
     out_ref[...] += jnp.sum(x * g[None], axis=(1, 2))[:, None]
 
@@ -79,25 +107,22 @@ def _bdot_kernel(x_ref, g_ref, out_ref):
 def batched_dot(x: jax.Array, g: jax.Array, *, interpret: bool = True):
     """u[k] = <x[k], g>. x: (K, N), g: (N,)."""
     K, n = x.shape
-    check_k(K)
-    block = ROWS * LANE
-    pad = (-n) % block
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((K, pad), x.dtype)], axis=1)
-        g = jnp.concatenate([g, jnp.zeros((pad,), g.dtype)])
+    tile, kp = _k_chunks(K)
+    x = _pad_axis0(_pad_lanes(x, ROWS * LANE), kp)
+    g = _pad_lanes(g, ROWS * LANE)
     m = x.shape[1] // LANE
-    x3 = x.reshape(K, m, LANE)
+    x3 = x.reshape(kp, m, LANE)
     g2 = g.reshape(m, LANE)
 
     out = pl.pallas_call(
         _bdot_kernel,
-        grid=(m // ROWS,),
+        grid=(kp // tile, m // ROWS),
         in_specs=[
-            pl.BlockSpec((K, ROWS, LANE), lambda i: (0, i, 0)),
-            pl.BlockSpec((ROWS, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((tile, ROWS, LANE), lambda kc, i: (kc, i, 0)),
+            pl.BlockSpec((ROWS, LANE), lambda kc, i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((K, 1), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((K, 1), jnp.float32),
+        out_specs=pl.BlockSpec((tile, 1), lambda kc, i: (kc, 0)),
+        out_shape=jax.ShapeDtypeStruct((kp, 1), jnp.float32),
         interpret=interpret,
     )(x3, g2)
-    return out[:, 0]
+    return out[:K, 0]

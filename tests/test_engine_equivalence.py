@@ -2,11 +2,19 @@
 
 The tree engine is the reference implementation; the flat engine re-routes
 the identical round math through `tree_ravel_stacked` + the fused Pallas
-kernels (`round_stats`, `weighted_agg`). Multi-round trajectories must
-agree to 1e-5 for both methods, with and without the MoE angle filter, and
-the parallel engines must agree with the sequential scan under full
-participation.
+kernels (`round_stats`, `weighted_agg`), now chunked over the client axis
+so ANY K is served (no MAX_K ceiling). Multi-round trajectories must agree
+to 1e-5 for both methods, with and without the MoE angle filter, for K
+across chunk boundaries (1, 33, 64), and the parallel engines must agree
+with the sequential scan under full participation. The client-sharded
+variant (engine="flat_sharded") is pinned against both on an 8-way
+host-device mesh in a subprocess.
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,7 +26,7 @@ from repro.core.weighting import AngleState
 K = 4
 
 
-def _toy_problem(tau=3, B=8, d=12, seed=0):
+def _toy_problem(K=K, tau=3, B=8, d=12, seed=0):
     """Non-IID linear-regression clients, plus a rank-4 'ffn/w_gate' leaf so
     angle_filter="dense_only" (moe_dense_only_pred) actually drops a segment
     of the flat buffer."""
@@ -41,16 +49,16 @@ def _toy_problem(tau=3, B=8, d=12, seed=0):
 
 
 def _run(engine, method, angle_filter="all", mode="parallel", rounds=4,
-         seed=0):
-    params, loss_fn, batches = _toy_problem(seed=seed)
-    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+         seed=0, k=K):
+    params, loss_fn, batches = _toy_problem(K=k, seed=seed)
+    cfg = fl.FLConfig(num_clients=k, clients_per_round=k, local_steps=3,
                       method=method, mode=mode, engine=engine,
                       angle_filter=angle_filter, base_lr=0.05)
     rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
-    state = AngleState.init(K)
+    state = AngleState.init(k)
     prev = fl.init_prev_delta(params)
-    sel = jnp.arange(K, dtype=jnp.int32)
-    sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+    sel = jnp.arange(k, dtype=jnp.int32)
+    sizes = jnp.asarray(10.0 * (1.0 + np.arange(k, dtype=np.float32)))
     ms = []
     for r in range(rounds):
         params, state, prev, m = rf(params, state, prev, batches, sel, sizes,
@@ -155,14 +163,126 @@ def test_flat_engine_requires_parallel_mode():
         fl.make_round_fn(loss_fn, cfg)
 
 
-def test_flat_engine_rejects_oversized_k():
-    """K beyond the VMEM tiling budget must fail loudly at build time, not
-    as a Mosaic compile error on TPU."""
+@pytest.mark.parametrize("k", [1, 33, 64])
+def test_flat_engine_unbounded_k(k):
+    """Regression for the former MAX_K=32 trace-time error: the chunked
+    kernels serve any K — K=1 (degenerate chunk), K=33 (ragged chunk), and
+    K=64 (multiple full chunks) must all match the tree reference."""
+    p_t, s_t, m_t = _run("tree", "fedadp", rounds=2, k=k)
+    p_f, s_f, m_f = _run("flat", "fedadp", rounds=2, k=k)
+    _assert_trees_close(p_t, p_f)
+    np.testing.assert_allclose(s_t.smoothed, s_f.smoothed, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(m_t[-1]["weights"]), np.asarray(m_f[-1]["weights"]),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_flat_engine_k128():
+    """Acceptance: FLConfig(engine="flat") works for K=128 (one round)."""
+    p_t, _, m_t = _run("tree", "fedadp", rounds=1, k=128)
+    p_f, _, m_f = _run("flat", "fedadp", rounds=1, k=128)
+    _assert_trees_close(p_t, p_f)
+    np.testing.assert_allclose(
+        np.asarray(m_t[0]["theta"]), np.asarray(m_f[0]["theta"]), atol=1e-5)
+
+
+def test_flat_sharded_requires_mesh_and_divisible_k():
     params, loss_fn, _ = _toy_problem()
-    cfg = fl.FLConfig(num_clients=64, clients_per_round=64, local_steps=3,
-                      engine="flat")
-    with pytest.raises(ValueError, match="at most K=32"):
+    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                      engine="flat_sharded")
+    with pytest.raises(ValueError, match="mesh"):
         fl.make_round_fn(loss_fn, cfg)
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg3 = fl.FLConfig(num_clients=3, clients_per_round=3, local_steps=3,
+                      engine="flat_sharded")
+    # 1-way mesh divides anything; a 2-way mesh cannot split K=3
+    fl.make_round_fn(loss_fn, cfg3, mesh=mesh)
+    if jax.device_count() >= 2:
+        mesh2 = jax.make_mesh((2,), ("data",))
+        with pytest.raises(ValueError, match="divisible"):
+            fl.make_round_fn(loss_fn, cfg3, mesh=mesh2)
+
+
+def test_flat_sharded_single_device_matches_flat():
+    """On a 1-way client mesh the sharded flat engine is the flat engine
+    plus no-op psums; trajectories must agree to 1e-5."""
+    params, loss_fn, batches = _toy_problem()
+    mesh = jax.make_mesh((1,), ("data",))
+    outs = {}
+    for engine in ("flat", "flat_sharded"):
+        params_r = params
+        cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                          method="fedadp", engine=engine, base_lr=0.05)
+        rf = jax.jit(fl.make_round_fn(loss_fn, cfg, mesh=mesh))
+        state = AngleState.init(K)
+        prev = fl.init_prev_delta(params)
+        sel = jnp.arange(K, dtype=jnp.int32)
+        sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+        for r in range(3):
+            params_r, state, prev, m = rf(params_r, state, prev, batches,
+                                          sel, sizes, jnp.int32(r))
+        outs[engine] = (params_r, state, m)
+    _assert_trees_close(outs["flat"][0], outs["flat_sharded"][0])
+    np.testing.assert_allclose(outs["flat"][1].smoothed,
+                               outs["flat_sharded"][1].smoothed, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs["flat"][2]["weights"]),
+                               np.asarray(outs["flat_sharded"][2]["weights"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_flat_sharded_matches_tree_8way_subprocess():
+    """Acceptance pin: sharded-flat == flat == tree to 1e-5 over multi-round
+    runs on an 8-way host-device client mesh (subprocess — this session is
+    pinned to one device)."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import fl
+        from repro.core.weighting import AngleState
+        K, d, tau, B = 16, 12, 3, 8
+        rng = np.random.default_rng(0)
+        params = {"w": jnp.zeros((d, 1), jnp.float32),
+                  "b": jnp.zeros((1,), jnp.float32)}
+        X = jnp.asarray(rng.normal(size=(K, tau, B, d)).astype(np.float32))
+        wt = rng.normal(size=(K, d, 1)).astype(np.float32)
+        Y = jnp.asarray(np.einsum("ktbd,kde->ktbe", X, wt))
+        def loss_fn(p, batch):
+            x, y = batch
+            return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+        mesh = jax.make_mesh((8,), ("data",))
+        sel = jnp.arange(K, dtype=jnp.int32)
+        sizes = jnp.asarray(np.linspace(10.0, 40.0, K, dtype=np.float32))
+        outs = {}
+        for engine in ("tree", "flat", "flat_sharded"):
+            cfg = fl.FLConfig(num_clients=K, clients_per_round=K,
+                              local_steps=tau, method="fedadp",
+                              engine=engine, base_lr=0.05)
+            rf = jax.jit(fl.make_round_fn(loss_fn, cfg, mesh=mesh))
+            p, state = params, AngleState.init(K)
+            prev = fl.init_prev_delta(params)
+            with mesh:
+                for r in range(3):
+                    p, state, prev, m = rf(p, state, prev, (X, Y), sel,
+                                           sizes, jnp.int32(r))
+            outs[engine] = (p, state, m)
+        for engine in ("flat", "flat_sharded"):
+            jax.tree.map(lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5),
+                outs["tree"][0], outs[engine][0])
+            np.testing.assert_allclose(outs["tree"][1].smoothed,
+                                       outs[engine][1].smoothed, atol=1e-5)
+            np.testing.assert_allclose(np.asarray(outs["tree"][2]["weights"]),
+                                       np.asarray(outs[engine][2]["weights"]),
+                                       rtol=1e-5, atol=1e-6)
+        print("SHARDED_FLAT_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "SHARDED_FLAT_OK" in out.stdout, out.stderr[-2000:]
 
 
 def test_unknown_engine_rejected():

@@ -82,19 +82,61 @@ def test_round_stats_masked(n):
     assert not np.allclose(np.asarray(got[1]), np.asarray(full[1]))
 
 
-def test_kernels_reject_oversized_k():
-    """Whole-K VMEM tiling: K beyond the budget must raise at trace time
-    (on TPU the alternative is an opaque Mosaic compile failure)."""
-    k = weighted_agg.MAX_K + 1
-    x = jnp.zeros((k, 256), jnp.float32)
-    g = jnp.zeros((256,), jnp.float32)
-    w = jnp.zeros((k,), jnp.float32)
-    with pytest.raises(ValueError, match="MAX_K"):
-        weighted_agg.weighted_agg(w, x)
-    with pytest.raises(ValueError, match="MAX_K"):
-        weighted_agg.batched_dot(x, g)
-    with pytest.raises(ValueError, match="MAX_K"):
-        round_stats.round_stats(x, g)
+# K values straddling the K_TILE=32 client-chunk boundary: degenerate
+# single chunk, one full + one ragged chunk, exact multiples.
+CHUNK_KS = [1, 33, 64]
+
+
+@pytest.mark.parametrize("k", CHUNK_KS)
+@pytest.mark.parametrize("n", [100, 16385])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_chunked_round_stats(k, n, dtype):
+    """Client-axis chunking (the former MAX_K trace-time error is gone):
+    ragged K + non-multiple-of-block N padding + bf16 inputs."""
+    x = jax.random.normal(jax.random.key(0), (k, n), dtype)
+    g = jax.random.normal(jax.random.key(1), (n,), dtype)
+    got = round_stats.round_stats(x, g)
+    want = ref.round_stats(x, g)
+    rtol = 1e-3 if dtype == jnp.float32 else 2e-2
+    for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(ww), rtol=rtol,
+                                   atol=1e-2, err_msg=name)
+
+
+@pytest.mark.parametrize("k", CHUNK_KS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_chunked_weighted_agg_and_batched_dot(k, dtype):
+    n = 16385  # one lane-block plus a ragged tail
+    x = jax.random.normal(jax.random.key(0), (k, n), dtype)
+    g = jax.random.normal(jax.random.key(1), (n,), dtype)
+    w = jax.random.uniform(jax.random.key(2), (k,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(weighted_agg.weighted_agg(w, x), np.float32),
+        np.asarray(ref.weighted_agg(w, x), np.float32), rtol=2e-2, atol=1e-2)
+    np.testing.assert_allclose(
+        np.asarray(weighted_agg.batched_dot(x, g)),
+        np.asarray(ref.batched_dot(x, g)), rtol=2e-2, atol=1e-1)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_chunked_round_stats_masked_across_chunk_boundary(dtype):
+    """A segment mask spanning both lane tiles and the K=33 ragged client
+    chunk: masked stats must equal the oracle over the masked subspace."""
+    k, n = 33, 33000  # > 2 lane blocks; 33 clients -> chunks of 32 + 1
+    x = jax.random.normal(jax.random.key(0), (k, n), dtype)
+    g = jax.random.normal(jax.random.key(1), (n,), dtype)
+    # contiguous masked-out segment straddling the first block boundary,
+    # as segment_mask produces for a dropped leaf
+    mask = jnp.ones((n,), jnp.float32).at[16000:17000].set(0.0)
+    got = round_stats.round_stats(x, g, mask)
+    want = ref.round_stats(x, g, mask)
+    rtol = 1e-3 if dtype == jnp.float32 else 2e-2
+    for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(ww), rtol=rtol,
+                                   atol=1e-1, err_msg=name)
+    # the mask must actually bite
+    full = round_stats.round_stats(x, g)
+    assert not np.allclose(np.asarray(got[1]), np.asarray(full[1]))
 
 
 def test_round_stats_bf16_accumulates_in_f32():

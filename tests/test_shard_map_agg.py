@@ -1,8 +1,10 @@
 """shard_map FedAdp aggregation vs the pjit/treemath path.
 
-The multi-device equivalence check runs in a subprocess (the test session
-itself is pinned to 1 device; the dry-run placeholder-device trick is
-reserved for repro.launch.dryrun).
+Covers both engines: "tree" (per-leaf reductions, model-axis sharding
+allowed) and "flat" (client-row-sharded (K, N) buffer through the fused
+Pallas kernels). The multi-device equivalence check runs in a subprocess
+(the test session itself is pinned to 1 device; the dry-run
+placeholder-device trick is reserved for repro.launch.dryrun).
 """
 import os
 import subprocess
@@ -12,6 +14,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.core import fl_shard_map, treemath, weighting
@@ -55,6 +58,49 @@ def test_single_device_mesh_matches_reference():
     )
 
 
+def test_single_device_flat_engine_matches_reference():
+    """engine="flat" on a 1x1 mesh: the kernel path with no-op psums must
+    reproduce the treemath reference."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    K = 4
+    deltas = {
+        "a": jax.random.normal(jax.random.key(0), (K, 8, 6)),
+        "b": jax.random.normal(jax.random.key(1), (K, 16)),
+    }
+    pspecs = {"a": P("data", None, None), "b": P("data", None)}
+    sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+    sm_prev = jnp.asarray([0.5, 0.2, 0.9, 0.4])
+    cnt_prev = jnp.asarray([1, 2, 0, 3], jnp.int32)
+    agg = fl_shard_map.fedadp_aggregate(mesh, pspecs, alpha=5.0,
+                                        engine="flat")
+    with mesh:
+        delta, theta, _, w = jax.jit(agg)(deltas, sizes, sm_prev, cnt_prev)
+    dref, tref, wref = _reference(deltas, sizes, sm_prev, cnt_prev)
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(tref), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wref), rtol=1e-5)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                                rtol=1e-4, atol=1e-6),
+        delta, dref,
+    )
+
+
+def test_flat_engine_rejects_model_sharded_specs():
+    """Model-axis-sharded leaves cannot ravel into contiguous client rows;
+    the flat engine must refuse them at build time."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    pspecs = {"a": P("data", None, "model")}
+    with pytest.raises(ValueError, match="client-only"):
+        fl_shard_map.fedadp_aggregate(mesh, pspecs, alpha=5.0, engine="flat")
+
+
+def test_unknown_shard_map_engine_rejected():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="engine"):
+        fl_shard_map.fedadp_aggregate(mesh, {"a": P("data", None)},
+                                      alpha=5.0, engine="nope")
+
+
 def test_multi_device_mesh_matches_reference_subprocess():
     prog = textwrap.dedent("""
         import os
@@ -84,6 +130,17 @@ def test_multi_device_mesh_matches_reference_subprocess():
         np.testing.assert_allclose(np.asarray(w), np.asarray(wref), rtol=1e-5)
         jax.tree.map(lambda a,b: np.testing.assert_allclose(
             np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6), delta, dref)
+        # flat engine: same math through client-row-sharded fused kernels
+        # (client-only pspecs; the "model" axis sees the buffer replicated)
+        pspecs2 = {"a": P("data", None, None), "b": P("data", None)}
+        agg2 = fl_shard_map.fedadp_aggregate(mesh, pspecs2, alpha=5.0,
+                                             engine="flat")
+        with mesh:
+            d2, t2, _, w2 = jax.jit(agg2)(deltas, sizes, sm, cnt)
+        np.testing.assert_allclose(np.asarray(t2), np.asarray(tref), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(w2), np.asarray(wref), rtol=1e-5)
+        jax.tree.map(lambda a,b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6), d2, dref)
         print("SHARD_MAP_OK")
     """)
     env = dict(os.environ)
