@@ -42,6 +42,8 @@ def run_fl(
     samples: int = 600,
     seed: int = 0,
     eval_every: int = 2,
+    engine: str = "tree",
+    transport: str = "f32",
 ):
     """Returns (history, seconds_per_round)."""
     train, test = get_task()
@@ -51,6 +53,7 @@ def run_fl(
     cfg = fl.FLConfig(
         num_clients=n, clients_per_round=n, local_steps=samples // batch_size,
         method=method, alpha=alpha, base_lr=base_lr,
+        engine=engine, transport=transport,
     )
     server = FedServer(model, cfg, nodes, test, batch_size=batch_size, seed=seed)
     server.step()  # warm the jit cache before timing

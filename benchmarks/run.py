@@ -264,6 +264,136 @@ def engine_ab(full: bool = False, tiny: bool = False) -> None:
     emit("engine_ab/json", 0.0, "BENCH_engine.json")
 
 
+def transport_sweep(full: bool = False, tiny: bool = False) -> None:
+    """Quantized delta transport A/B: dtype x K sweep over the flat engine.
+
+    For each wire format (f32 / bf16 / int8) and K in {8, 32, 64, 128},
+    times a full federated round through `FLConfig(transport=...)` and
+    reports the uplink bytes the wire moves (`transport.wire_bytes` —
+    values plus int8's per-chunk f32 scales), writing the sweep to
+    BENCH_transport.json for the CI bench-smoke artifact.
+
+    Unless `tiny`, also pins convergence parity on the non-IID synthetic
+    task (5 IID + 5 one-class nodes): rounds-to-target under the int8 wire
+    must stay within 10% of the f32 wire (the acceptance bound; quant
+    noise on this task is well inside round-count noise).
+
+    On CPU the kernels run in interpret mode, so us_per_round measures the
+    correctness path; bytes_per_round is exact either way."""
+    import json
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import transport as transport_mod
+    from repro.core import fl as fl_mod
+    from repro.core.weighting import AngleState
+
+    ks = (4, 8) if tiny else (8, 32, 64, 128)
+    d = 1 << 10 if tiny else (1 << 16 if full else 1 << 14)
+    tau, B = 2, 4
+    n_params = d + 1  # w (d, 1) + b (1,)
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.zeros((d, 1), jnp.float32), "b": jnp.zeros((1,), jnp.float32)}
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    records = []
+    for K in ks:
+        X = jnp.asarray(rng.normal(size=(K, tau, B, d)).astype(np.float32))
+        Y = jnp.asarray(rng.normal(size=(K, tau, B, 1)).astype(np.float32))
+        sel = jnp.arange(K, dtype=jnp.int32)
+        sizes = jnp.ones((K,), jnp.float32)
+        wb = {}
+        for tr in transport_mod.TRANSPORTS:
+            cfg = fl_mod.FLConfig(
+                num_clients=K,
+                clients_per_round=K,
+                local_steps=tau,
+                method="fedadp",
+                engine="flat",
+                transport=tr,
+                base_lr=0.05,
+            )
+            rf = jax.jit(fl_mod.make_round_fn(loss_fn, cfg))
+            state = AngleState.init(K)
+            prev = fl_mod.init_prev_delta(params)
+            args = (params, state, prev, (X, Y), sel, sizes, jnp.int32(0))
+            jax.block_until_ready(rf(*args))  # compile
+            t0 = time.time()
+            reps = 5
+            for _ in range(reps):
+                jax.block_until_ready(rf(*args))
+            us = (time.time() - t0) / reps * 1e6
+            wb[tr] = transport_mod.wire_bytes(K, n_params, tr)
+            emit(f"transport/K={K}/{tr}/round", us, f"bytes={wb[tr]}")
+            records.append(
+                {
+                    "K": K,
+                    "d": d,
+                    "transport": tr,
+                    "us_per_round": us,
+                    "bytes_per_round": wb[tr],
+                }
+            )
+        emit(
+            f"transport/K={K}/int8_bytes_over_f32",
+            0.0,
+            f"{wb['int8'] / wb['f32']:.4f}",
+        )
+
+    convergence = None
+    if not tiny:
+        rounds = 120 if full else 60
+        per = {}
+        for tr in ("f32", "int8"):
+            hist, spr = run_fl(
+                "fedadp",
+                node_spec(5, 5, 1),
+                rounds=rounds,
+                target=0.85,
+                engine="flat",
+                transport=tr,
+            )
+            per[tr] = hist.rounds_to_target
+            emit(
+                f"transport/convergence/{tr}/rounds_to_85",
+                spr * 1e6,
+                per[tr] or f">{rounds}",
+            )
+        # a wire that never reached the target is a parity FAILURE, not a
+        # skipped measurement — record it as such so the artifact can't be
+        # mistaken for a --tiny run (where convergence stays null).
+        ratio = (per["int8"] / per["f32"]
+                 if per["f32"] and per["int8"] else None)
+        emit(
+            "transport/convergence/int8_over_f32",
+            0.0,
+            f"{ratio:.3f}" if ratio else "no-convergence",
+        )
+        convergence = {
+            "rounds_f32": per["f32"],
+            "rounds_int8": per["int8"],
+            "ratio": ratio,
+            "within_10pct": ratio is not None and ratio <= 1.1,
+        }
+
+    payload = {
+        "bench": "transport_sweep",
+        "d": d,
+        "n_params": n_params,
+        "tiny": tiny,
+        "transports": list(transport_mod.TRANSPORTS),
+        "records": records,
+        "convergence": convergence,
+    }
+    with open("BENCH_transport.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("transport/json", 0.0, "BENCH_transport.json")
+
+
 def roofline_table(full: bool = False) -> None:
     """Post-process results/dryrun.jsonl into roofline terms (if present)."""
     import json
@@ -296,6 +426,7 @@ BENCHES = {
     "ablation": method_ablation,
     "kernels": kernel_micro,
     "engine": engine_ab,
+    "transport": transport_sweep,
     "roofline": roofline_table,
 }
 
@@ -310,7 +441,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in names:
         kwargs = {"full": args.full}
-        if name == "engine":
+        if name in ("engine", "transport"):
             kwargs["tiny"] = args.tiny
         BENCHES[name](**kwargs)
 

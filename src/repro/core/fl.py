@@ -37,6 +37,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import transport as transport_mod
 from repro.core import fl_shard_map, treemath, weighting
 from repro.core.weighting import AngleState
 from repro.kernels import round_stats as round_stats_mod
@@ -66,14 +67,33 @@ class FLConfig:
     #            clients per VMEM tile), so any K is supported — there is
     #            no MAX_K ceiling.
     #   "flat_sharded" — the flat buffer row-sharded over the mesh client
-    #            axis ("pod","data"); per-shard kernel calls + psums via
-    #            fl_shard_map.make_flat_ops. Requires passing `mesh=` to
-    #            make_round_fn, and clients_per_round divisible by the
-    #            client-axis size.
+    #            axis ("pod","data"); the WHOLE round (per-shard kernel
+    #            calls, stat psums, replicated weighting, aggregate psum)
+    #            is one shard_map region via fl_shard_map.make_round_ops.
+    #            Requires passing `mesh=` to make_round_fn; any
+    #            clients_per_round works (K % shards != 0 zero-pads the
+    #            client axis — padded rows get exactly zero weight).
     # The sequential mode's pass-2 statistics also stream through the
     # round_stats kernel (K=1 rows against the raveled global delta), so
     # all modes share one stats implementation.
     engine: str = "tree"  # tree | flat | flat_sharded
+    # Delta transport — the client-uplink wire format (repro.transport):
+    #   "f32"  — reference wire, deltas ship unmodified.
+    #   "bf16" — 2 bytes/param; the flat engines read the bf16 buffer
+    #            directly (the kernels' in-VMEM astype IS the dequant).
+    #   "int8" — 1 byte/param + one f32 scale per (client, kernel chunk);
+    #            the flat engines run the fused in-register-dequant kernels
+    #            (round_stats_q / weighted_agg_q) so stats + aggregation
+    #            stay one HBM pass over ~4x fewer bytes. The tree engine
+    #            NEVER reads quantized buffers: it dequantizes back to the
+    #            stacked tree and runs the per-leaf reference reductions.
+    transport: str = "f32"  # f32 | bf16 | int8
+    # Carry the per-client quantization residual across rounds (EF-SGD) so
+    # the compressed angle statistics stay unbiased over time. Requires
+    # transport != "f32" and parallel mode; round_fn then takes a trailing
+    # ef_state (num_clients, N) f32 array and returns its update as a 5th
+    # output (see transport.init_error_feedback).
+    error_feedback: bool = False
     # Pallas interpret mode for engine="flat": None = auto (interpret
     # everywhere except a real TPU backend), or force True/False.
     interpret: Optional[bool] = None
@@ -175,7 +195,13 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
     `delta_constraint` optionally applies sharding constraints to the
     stacked deltas (parallel mode). `mesh` is required by
     engine="flat_sharded" (the client axis of the flat buffer is sharded
-    over the mesh's ("pod","data") axes) and ignored otherwise.
+    over the mesh's ("pod","data") axes; K not divisible by the client
+    axis is zero-padded before sharding) and ignored otherwise.
+
+    With `fl.error_feedback` the round takes a trailing
+    `ef_state` (num_clients, N) f32 residual array
+    (`transport.init_error_feedback`) and returns
+    (params, angle_state, new_prev_delta, metrics, new_ef_state).
 
     When `angle_pred` is None, `fl.angle_filter` selects a built-in
     predicate ("dense_only" -> `moe_dense_only_pred`); an explicit
@@ -187,17 +213,18 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
         angle_pred = moe_dense_only_pred
     if fl.engine not in ("tree", "flat", "flat_sharded"):
         raise ValueError(f"unknown engine {fl.engine!r}")
-    if fl.engine == "flat_sharded":
-        if mesh is None:
-            raise ValueError(
-                "engine='flat_sharded' shards the (K, N) delta buffer over "
-                "the mesh client axis; pass mesh= to make_round_fn")
-        csize = fl_shard_map.client_axis_size(mesh)
-        if fl.clients_per_round % csize:
-            raise ValueError(
-                f"engine='flat_sharded' needs clients_per_round divisible "
-                f"by the client-axis size (K={fl.clients_per_round}, "
-                f"client axis {csize})")
+    if fl.transport not in transport_mod.TRANSPORTS:
+        raise ValueError(
+            f"unknown transport {fl.transport!r} (expected one of "
+            f"{transport_mod.TRANSPORTS})")
+    if fl.error_feedback and fl.transport == "f32":
+        raise ValueError(
+            "error_feedback carries the quantization residual; transport="
+            "'f32' has none (set transport='bf16' or 'int8')")
+    if fl.engine == "flat_sharded" and mesh is None:
+        raise ValueError(
+            "engine='flat_sharded' shards the (K, N) delta buffer over "
+            "the mesh client axis; pass mesh= to make_round_fn")
     if fl.mode == "parallel":
         return _make_parallel_round(loss_fn, fl, delta_constraint, angle_pred,
                                     grad_constraint, mesh)
@@ -207,6 +234,11 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
                 f"engine={fl.engine!r} requires mode='parallel' (sequential "
                 "mode never materializes the stacked (K, N) delta buffer; "
                 "its stats already stream through round_stats)")
+        if fl.transport != "f32":
+            raise ValueError(
+                "transport compresses the stacked parallel uplink buffer; "
+                "sequential mode streams one client at a time (use "
+                "mode='parallel' for quantized transport)")
         return _make_sequential_round(loss_fn, fl, angle_pred, grad_constraint)
     raise ValueError(fl.mode)
 
@@ -221,16 +253,31 @@ def _resolve_interpret(fl: FLConfig) -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _pad_rows(a, kp: int, fill=0.0):
+    """Pad axis 0 to kp rows with a constant (client-axis shard padding)."""
+    k = a.shape[0]
+    if kp == k:
+        return a
+    pad = jnp.full((kp - k,) + a.shape[1:], fill, a.dtype)
+    return jnp.concatenate([a, pad])
+
+
 def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=None,
                          grad_constraint=None, mesh=None):
-    flat_ops = None
+    round_ops = None
     if fl.engine == "flat_sharded":
-        flat_ops = fl_shard_map.make_flat_ops(
-            mesh, interpret=_resolve_interpret(fl))
+        round_ops = fl_shard_map.make_round_ops(
+            mesh, alpha=fl.alpha, method=fl.method,
+            interpret=_resolve_interpret(fl), transport=fl.transport)
         row_sharding = fl_shard_map.flat_client_sharding(mesh)
+        csize = fl_shard_map.client_axis_size(mesh)
 
     def round_fn(params, angle_state: AngleState, prev_delta, batches,
-                 sel_idx, data_sizes, round_idx):
+                 sel_idx, data_sizes, round_idx, ef_state=None):
+        if fl.error_feedback and ef_state is None:
+            raise ValueError(
+                "fl.error_feedback=True: pass ef_state (see "
+                "transport.init_error_feedback) as the round's 8th argument")
         lr = _lr_at(fl, round_idx)
         deltas, losses = jax.vmap(
             lambda b: local_update(loss_fn, params, b, lr, fl.prox_mu,
@@ -240,66 +287,136 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             deltas = delta_constraint(deltas)
 
         psi_avg = weighting.fedavg_weights(data_sizes)
+        new_ef = None
 
-        if fl.engine in ("flat", "flat_sharded"):
-            # single (K, N) ravel; stats + both aggregations are fused
-            # single-HBM-pass kernels over the contiguous buffer (chunked
-            # over the client axis, so any K fits the VMEM envelope).
-            interpret = _resolve_interpret(fl)
-            maskv = (
-                treemath.segment_mask(params,
-                                      angle_keep_list(params, angle_pred))
-                if angle_pred else None
-            )
-            if fl.engine == "flat_sharded":
-                # rows sharded over ("pod","data"): per-shard kernel calls
-                # + a psum of the partial dots/sqnorms and aggregates.
-                stats_fn, agg_fn = flat_ops
-                flat, unravel = treemath.tree_ravel_stacked(deltas,
-                                                            row_sharding)
-                mvec = (maskv if maskv is not None
-                        else jnp.ones((flat.shape[1],), jnp.float32))
-                g_flat, dots, sqs, sqg = stats_fn(flat, psi_avg, mvec)
-            else:
+        # ---- client uplink: compress the stacked deltas to the wire ----
+        if fl.transport != "f32":
+            flat0, unravel0 = treemath.tree_ravel_stacked(deltas)
+            if fl.error_feedback:
+                # EF-SGD: replay the carried residual into this round's
+                # signal, then carry what quantization drops this round.
+                flat0 = flat0 + ef_state[sel_idx]
+            q = transport_mod.quantize(flat0, fl.transport)
+            if fl.error_feedback:
+                new_ef = ef_state.at[sel_idx].set(
+                    flat0 - transport_mod.dequantize(q))
+            if fl.engine == "tree":
+                # reference contract: the tree engine never reads the wire
+                # buffer — dequantize back to the stacked tree and run the
+                # per-leaf reference reductions on the reconstruction.
+                # f32 leaves: rounding the dequantized values to a bf16
+                # leaf dtype would add a second loss the flat engines
+                # (which stream the wire directly) never incur.
+                deltas = treemath.tree_unravel_stacked(
+                    deltas, transport_mod.dequantize(q), jnp.float32)
+
+        # (N,) 0/1 segment mask over the ravel order — ONE copy shared by
+        # both flat engines (the tree engine masks per-leaf views instead),
+        # so the angle_filter semantics cannot fork between them.
+        maskv = None
+        if fl.engine != "tree" and angle_pred:
+            maskv = treemath.segment_mask(params,
+                                          angle_keep_list(params, angle_pred))
+
+        if fl.engine == "flat_sharded":
+            # the WHOLE round is one shard_map call (stats psums ->
+            # replicated Eq.9 + Gompertz weighting -> aggregate psum):
+            # rows sharded over ("pod","data"), per-shard fused kernels.
+            if fl.transport == "f32":
                 flat, unravel = treemath.tree_ravel_stacked(deltas)
-                g_flat = weighted_agg_mod.weighted_agg(psi_avg, flat,
-                                                       interpret=interpret)
-                dots, sqs, sqg = round_stats_mod.round_stats(
-                    flat, g_flat, maskv, interpret=interpret)
+                values, scales = flat, None
+            else:
+                values, scales, unravel = q.values, q.scales, unravel0
+            k = values.shape[0]
+            kp = -(-k // csize) * csize  # pad the client axis to the mesh
+            values = jax.lax.with_sharding_constraint(
+                _pad_rows(values, kp), row_sharding)
+            mvec = (maskv if maskv is not None
+                    else jnp.ones((values.shape[1],), jnp.float32))
+            wire = (values,) if scales is None else (
+                values, jax.lax.with_sharding_constraint(
+                    _pad_rows(scales, kp, 1.0), row_sharding))
+            # padded rows: zero deltas, zero data size -> -inf softmax
+            # logit -> exactly zero weight and zero stats contribution.
+            g_flat, dots, sqs, sqg, delta_flat, theta, _, w = round_ops(
+                *wire, _pad_rows(psi_avg, kp), mvec,
+                _pad_rows(angle_state.smoothed[sel_idx], kp),
+                _pad_rows(angle_state.count[sel_idx], kp),
+                _pad_rows(data_sizes, kp))
+            dots, sqs = dots[:k], sqs[:k]
+            theta, w = theta[:k], w[:k]
             g_avg = unravel(g_flat, jnp.float32)
+            delta = unravel(delta_flat)
+        elif fl.engine == "flat":
+            # single (K, N) ravel; stats + both aggregations are fused
+            # single-HBM-pass kernels over the contiguous buffer
+            # (chunked over the client axis, so any K fits the VMEM
+            # envelope). Quantized wire buffers flow through the
+            # fused-dequant kernel variants untouched.
+            interpret = _resolve_interpret(fl)
+            if fl.transport == "f32":
+                flat, unravel = treemath.tree_ravel_stacked(deltas)
+                wire_x, wire_s = flat, None
+            else:
+                unravel = unravel0
+                wire_x, wire_s = q.values, q.scales
+
+            def agg_wire(wvec):
+                if wire_s is None:
+                    return weighted_agg_mod.weighted_agg(
+                        wvec, wire_x, interpret=interpret,
+                        out_dtype=jnp.float32)
+                return weighted_agg_mod.weighted_agg_q(
+                    wvec, wire_x, wire_s, interpret=interpret)
+
+            g_flat = agg_wire(psi_avg)
+            if wire_s is None:
+                dots, sqs, sqg = round_stats_mod.round_stats(
+                    wire_x, g_flat, maskv, interpret=interpret)
+            else:
+                dots, sqs, sqg = round_stats_mod.round_stats_q(
+                    wire_x, wire_s, g_flat, maskv, interpret=interpret)
+            g_avg = unravel(g_flat, jnp.float32)
+            theta = weighting.instantaneous_angle(dots, sqs, sqg)
         else:
             angle_mask = (build_angle_mask(params, angle_pred)
                           if angle_pred else None)
-            # f32: rounding g to the (possibly bf16) leaf dtype before the
-            # stats would lose the angle signal and diverge from the flat
-            # engine; also matches init_prev_delta's f32 threading.
-            g_avg = treemath.tree_weighted_sum(deltas, psi_avg, jnp.float32)
+            # f32: rounding g to the (possibly bf16) leaf dtype before
+            # the stats would lose the angle signal and diverge from the
+            # flat engine; also matches init_prev_delta's f32 threading.
+            g_avg = treemath.tree_weighted_sum(deltas, psi_avg,
+                                               jnp.float32)
             d_view = angle_mask(deltas) if angle_mask else deltas
             g_view = angle_mask(g_avg) if angle_mask else g_avg
             dots = treemath.tree_vdot_batched(d_view, g_view)
             sqs = treemath.tree_sqnorm_batched(d_view)
             sqg = treemath.tree_sqnorm(g_view)
-        theta = weighting.instantaneous_angle(dots, sqs, sqg)
+            theta = weighting.instantaneous_angle(dots, sqs, sqg)
 
+        # Eq. 9 scatter — ONE copy for all engines (flat_sharded computed
+        # the same float ops in-region for its weighting; this scatter is
+        # its state bookkeeping and must stay op-identical).
         new_state = _scatter_angles(angle_state, sel_idx, theta)
         theta_sm = new_state.smoothed[sel_idx]
-        if fl.method == "fedadp":
-            w = weighting.fedadp_weights(theta_sm, data_sizes, fl.alpha)
-        else:  # fedavg / fedprox aggregate by data size
-            w = psi_avg
-        if fl.engine in ("flat", "flat_sharded"):
-            # fedavg/fedprox aggregate with w == psi_avg: reuse g_flat rather
-            # than re-streaming the (K, N) buffer (Pallas calls aren't CSE'd)
-            if fl.method != "fedadp":
-                delta_flat = g_flat
-            elif fl.engine == "flat_sharded":
-                delta_flat = agg_fn(flat, w)
+        if fl.engine != "flat_sharded":
+            if fl.method == "fedadp":
+                w = weighting.fedadp_weights(theta_sm, data_sizes, fl.alpha)
+            else:  # fedavg / fedprox aggregate by data size
+                w = psi_avg
+            if fl.engine == "flat":
+                # fedavg/fedprox aggregate with w == psi_avg: reuse g_flat
+                # rather than re-streaming the buffer (no Pallas CSE)
+                delta_flat = g_flat if fl.method != "fedadp" else agg_wire(w)
+                delta = unravel(delta_flat)
             else:
-                delta_flat = weighted_agg_mod.weighted_agg(
-                    w, flat, interpret=interpret)
-            delta = unravel(delta_flat)
-        else:
-            delta = treemath.tree_weighted_sum(deltas, w)
+                # f32 accumulate, ONE cast to the param leaf dtype — same
+                # rounding schedule as the flat engines' unravel, and it
+                # keeps params at their dtype when the transport path
+                # reconstructed the deltas as f32 leaves.
+                delta = jax.tree.map(
+                    lambda d, p: d.astype(p.dtype),
+                    treemath.tree_weighted_sum(deltas, w, jnp.float32),
+                    params)
         new_params = treemath.tree_add(params, delta)
 
         # Fig.7 divergence: (1/K) sum_i ||dF - dF_i|| with dF ~ -delta/lr
@@ -310,6 +427,8 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             "cos": jnp.cos(theta),
             "expected_contribution": weighting.expected_contribution(w, jnp.cos(theta)),
         }
+        if fl.error_feedback:
+            return new_params, new_state, g_avg, metrics, new_ef
         return new_params, new_state, g_avg, metrics
 
     return round_fn

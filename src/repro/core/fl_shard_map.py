@@ -26,9 +26,10 @@ Two engines share this schedule:
   over K/num_shards rows regardless of K. It requires client-only
   sharding (each client's delta row is contiguous on its shard).
 
-`make_flat_ops` exposes the flat per-shard kernel + psum building blocks;
-core/fl.py's `engine="flat_sharded"` round path reuses them so the pjit
-and shard_map stacks aggregate through literally the same kernels.
+`make_round_ops` packages the whole flat round — stats psums, the
+replicated O(K) weighting, and the aggregate psum — as ONE shard_map
+region; core/fl.py's `engine="flat_sharded"` round path reuses it so the
+pjit and shard_map stacks aggregate through literally the same kernels.
 
 Works on any mesh whose client axis is "data" (+"pod") and whose tensor
 axes follow models/sharding.param_pspecs; on a 1x1 host mesh it reduces to
@@ -85,61 +86,110 @@ def _shard_map(body, mesh: Mesh, in_specs, out_specs):
         return smap(body, check_rep=False, **kw)
 
 
-def make_flat_ops(mesh: Mesh, *, interpret: bool = True):
-    """Client-sharded kernel ops over a (K, N) flat delta buffer.
-
-    Returns (stats, agg) — both shard_map'd over the mesh client axis, with
-    the buffer row-sharded (`flat_client_sharding`) and everything else
-    replicated. K must be divisible by the client-axis size.
-
-      stats(flat, psi, mask) -> (g_flat, dots, sqs, sqg):
-        one per-shard `weighted_agg` for the psi-weighted global delta
-        (psum over clients), then one per-shard `round_stats` pass against
-        the replicated g; partial dots/sqnorms are scattered into (K,)
-        and psum'd. mask is a REQUIRED (N,) f32 vector — pass ones for
-        unfiltered stats (multiplying by 1.0 is exact in f32, so the
-        result is bit-identical to the unmasked kernel).
-
-      agg(flat, w) -> (N,): psum over clients of per-shard `weighted_agg`.
-    """
+def _client_axis(mesh: Mesh):
     caxes = _client_axes(mesh)
-    caxis = caxes if len(caxes) > 1 else caxes[0]
+    return caxes if len(caxes) > 1 else caxes[0]
+
+
+def _shard_slots(values, caxis):
+    """Global client slots owned by this shard (rows are client-sharded)."""
+    k_loc = values.shape[0]
+    return jax.lax.axis_index(caxis) * k_loc + jnp.arange(k_loc)
+
+
+def _shard_agg(w_loc, values, scales, interpret):
+    """Per-shard weighted aggregation over the local rows, f32 out.
+
+    scales is None for f32/bf16 wire buffers (the kernels' in-VMEM
+    astype(f32) IS the bf16 dequant); int8 routes through the fused
+    in-register dequant kernel with the per-(client, chunk) scales.
+    """
+    if scales is None:
+        return weighted_agg_mod.weighted_agg(
+            w_loc, values, interpret=interpret, out_dtype=jnp.float32)
+    return weighted_agg_mod.weighted_agg_q(
+        w_loc, values, scales, interpret=interpret)
+
+
+def _shard_stats(values, scales, g_flat, mask, interpret):
+    """Per-shard fused angle statistics over the local rows."""
+    if scales is None:
+        return round_stats_mod.round_stats(
+            values, g_flat, mask, interpret=interpret)
+    return round_stats_mod.round_stats_q(
+        values, scales, g_flat, mask, interpret=interpret)
+
+
+def make_round_ops(mesh: Mesh, *, alpha: float, method: str = "fedadp",
+                   interpret: bool = True, transport: str = "f32"):
+    """The whole aggregation round as ONE shard_map call.
+
+    PR 2's `make_flat_ops` exposed stats and aggregate as two separate
+    shard_map regions, which re-entered the collective schedule (and
+    re-staged the row shards) between them. The weighting in between is
+    O(K) replicated scalar math — Eq. 9 smoothing + Gompertz softmax — so
+    it folds into the same region: stats psums -> replicated weighting ->
+    aggregate psum, one schedule, the buffer staying put on its shard
+    (the two-region form is gone; this is the only flat schedule). For
+    fedavg/fedprox the weighting IS psi, so the aggregate reuses the
+    stats' g_flat and the round is a single client-axis reduction.
+
+    transport selects the buffer's wire dtype (repro.transport):
+    "f32"/"bf16" stream it through the plain kernels (bf16 dequant is the
+    kernels' in-VMEM astype); "int8" adds a row-sharded
+    (K, num_chunks(N)) f32 scales operand and routes through the fused
+    in-register dequant kernels — the per-shard partial dots/sqnorms and
+    aggregates are psum'd exactly as in the f32 path, so scales never
+    cross shards. mask is a REQUIRED (N,) f32 vector — pass ones for
+    unfiltered stats (multiplying by 1.0 is exact in f32, so the result
+    is bit-identical to the unmasked kernel).
+
+    Returns round_op(values[, scales], psi, mask, smoothed_sel, count_sel,
+    data_sizes) -> (g_flat, dots, sqs, sqg, delta_flat, theta, theta_sm,
+    w), where smoothed_sel/count_sel are the selected clients' angle-state
+    slots and theta_sm applies Eq. 9 with the same float ops as core.fl's
+    scatter-then-gather, so trajectories match the unsharded engines.
+    """
+    caxis = _client_axis(mesh)
     row_spec = P(caxis)
 
-    def _slots(flat):
-        k_loc = flat.shape[0]
-        return jax.lax.axis_index(caxis) * k_loc + jnp.arange(k_loc)
-
-    def _stats_body(flat, psi, mask):
-        my = _slots(flat)
-        g_part = weighted_agg_mod.weighted_agg(psi[my], flat,
-                                               interpret=interpret)
-        g_flat = jax.lax.psum(g_part, caxis)
-        d_loc, s_loc, sqg = round_stats_mod.round_stats(
-            flat, g_flat, mask, interpret=interpret)
+    def _body(values, scales, psi, mask, smoothed_sel, count_sel,
+              data_sizes):
+        my = _shard_slots(values, caxis)
+        g_flat = jax.lax.psum(
+            _shard_agg(psi[my], values, scales, interpret), caxis)
+        d_loc, s_loc, sqg = _shard_stats(values, scales, g_flat, mask,
+                                         interpret)
         k = psi.shape[0]
         dots = jax.lax.psum(
             jnp.zeros((k,), jnp.float32).at[my].set(d_loc), caxis)
         sqs = jax.lax.psum(
             jnp.zeros((k,), jnp.float32).at[my].set(s_loc), caxis)
-        # g_flat is replicated post-psum, so sqg agrees across shards.
-        return g_flat, dots, sqs, sqg
+        theta = weighting.instantaneous_angle(dots, sqs, sqg)
+        cnt = count_sel.astype(jnp.float32) + 1.0
+        theta_sm = ((cnt - 1.0) * smoothed_sel + theta) / cnt  # Eq. 9
+        if method == "fedadp":
+            w = weighting.fedadp_weights(theta_sm, data_sizes, alpha)
+            delta_flat = jax.lax.psum(
+                _shard_agg(w[my], values, scales, interpret), caxis)
+        else:  # w == psi: the stats' aggregate IS the round delta
+            w = psi
+            delta_flat = g_flat
+        return g_flat, dots, sqs, sqg, delta_flat, theta, theta_sm, w
 
-    def _agg_body(flat, w):
-        part = weighted_agg_mod.weighted_agg(w[_slots(flat)], flat,
-                                             interpret=interpret)
-        return jax.lax.psum(part, caxis)
-
-    stats = _shard_map(_stats_body, mesh, in_specs=(row_spec, P(), P()),
-                       out_specs=(P(), P(), P(), P()))
-    agg = _shard_map(_agg_body, mesh, in_specs=(row_spec, P()),
-                     out_specs=P())
-    return stats, agg
+    outs = (P(),) * 8
+    if transport == "int8":
+        return _shard_map(_body, mesh,
+                          in_specs=(row_spec, row_spec) + (P(),) * 5,
+                          out_specs=outs)
+    return _shard_map(
+        lambda values, *rest: _body(values, None, *rest), mesh,
+        in_specs=(row_spec,) + (P(),) * 5, out_specs=outs)
 
 
 def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
                      method: str = "fedadp", engine: str = "tree",
-                     interpret: bool = True):
+                     interpret: bool = True, transport: str = "f32"):
     """Build an aggregation fn over K-stacked deltas.
 
     delta_pspecs: PartitionSpec tree for the STACKED deltas — leading axis
@@ -148,9 +198,11 @@ def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
     engine="tree" (reference) runs per-leaf reductions and supports
     model-axis-sharded leaves; engine="flat" ravels the stacked tree into a
     client-row-sharded (K, N) buffer and runs the fused Pallas kernels per
-    shard (`make_flat_ops`) — it requires client-only sharding and is the
-    large-cohort fast path. `interpret` is the Pallas interpret switch for
-    the flat engine (True off-TPU).
+    shard in ONE shard_map region (`make_round_ops`) — it requires
+    client-only sharding and is the large-cohort fast path. `interpret` is
+    the Pallas interpret switch for the flat engine (True off-TPU);
+    `transport` (flat engine only) compresses the buffer to the wire dtype
+    before aggregation (repro.transport; f32 is the reference wire).
 
     Returns agg(deltas, data_sizes, smoothed_prev, count_prev) ->
       (weighted_delta, theta, theta_smoothed, weights); weighted_delta is
@@ -160,9 +212,15 @@ def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
     """
     if engine == "flat":
         return _fedadp_aggregate_flat(mesh, delta_pspecs, alpha=alpha,
-                                      method=method, interpret=interpret)
+                                      method=method, interpret=interpret,
+                                      transport=transport)
     if engine != "tree":
         raise ValueError(f"unknown engine {engine!r}")
+    if transport != "f32":
+        raise ValueError(
+            "the tree engine never reads quantized buffers (ROADMAP "
+            "transport contract); use engine='flat' for transport="
+            f"{transport!r}")
     caxes = _client_axes(mesh)
     caxis = caxes if len(caxes) > 1 else caxes[0]
 
@@ -255,14 +313,19 @@ def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
 
 
 def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
-                           method: str, interpret: bool):
+                           method: str, interpret: bool,
+                           transport: str = "f32"):
     """The flat engine behind `fedadp_aggregate(engine="flat")`.
 
     Same collective schedule as the tree engine — (1) psi-weighted psum,
     (2) per-client stat psums, (3) replicated weighting, (4) weighted psum
     — but each shard's contribution streams through the fused kernels over
-    its contiguous (K_loc, N) rows.
+    its contiguous (K_loc, N) rows, and the whole round is ONE shard_map
+    region (`make_round_ops`). transport != "f32" compresses the raveled
+    buffer to the wire dtype first; the kernels dequantize in-register.
     """
+    from repro import transport as transport_mod
+
     spec_leaves = jax.tree.leaves(delta_pspecs,
                                   is_leaf=lambda x: isinstance(x, P))
     for s in spec_leaves:
@@ -271,7 +334,8 @@ def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
                 "engine='flat' ravels each client's delta into one "
                 f"contiguous row and requires client-only sharding; got {s} "
                 "(use engine='tree' for model-axis-sharded leaves)")
-    stats, agg = make_flat_ops(mesh, interpret=interpret)
+    round_op = make_round_ops(mesh, alpha=alpha, method=method,
+                              interpret=interpret, transport=transport)
     row_sharding = flat_client_sharding(mesh)
 
     def body(deltas, data_sizes, smoothed_prev, count_prev):
@@ -285,14 +349,16 @@ def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
         flat, unravel = treemath.tree_ravel_stacked(deltas, row_sharding)
         psi_avg = weighting.fedavg_weights(data_sizes)
         ones = jnp.ones((flat.shape[1],), jnp.float32)
-        _, dots, sqs, sqg = stats(flat, psi_avg, ones)
-        theta = weighting.instantaneous_angle(dots, sqs, sqg)
-        cnt = count_prev.astype(jnp.float32) + 1.0
-        theta_sm = ((cnt - 1.0) * smoothed_prev + theta) / cnt  # Eq. 9
-        if method == "fedadp":
-            w = weighting.fedadp_weights(theta_sm, data_sizes, alpha)
+        if transport == "f32":
+            wire = (flat,)
         else:
-            w = psi_avg
-        return unravel(agg(flat, w), jnp.float32), theta, theta_sm, w
+            q = transport_mod.quantize(flat, transport)
+            values = jax.lax.with_sharding_constraint(q.values, row_sharding)
+            wire = (values,) if q.scales is None else (
+                values,
+                jax.lax.with_sharding_constraint(q.scales, row_sharding))
+        _, _, _, _, delta_flat, theta, theta_sm, w = round_op(
+            *wire, psi_avg, ones, smoothed_prev, count_prev, data_sizes)
+        return unravel(delta_flat, jnp.float32), theta, theta_sm, w
 
     return body

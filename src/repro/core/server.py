@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import transport as transport_mod
 from repro.core import fl as fl_mod
 from repro.core.weighting import AngleState
 from repro.data.synthetic import Dataset
@@ -66,6 +67,13 @@ class FedServer:
                                  mesh=mesh))
         self.angle_state = AngleState.init(fl.num_clients)
         self.prev_delta = fl_mod.init_prev_delta(self.params)
+        # fl.transport compresses the client uplink; with error_feedback
+        # the per-client quantization residual is carried between rounds.
+        self.ef_state = None
+        if fl.error_feedback:
+            n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(self.params))
+            self.ef_state = transport_mod.init_error_feedback(
+                fl.num_clients, n)
         self.round = 0
         self._iters = [
             _epoch_batcher(ds, batch_size, seed + 17 * i)
@@ -93,10 +101,14 @@ class FedServer:
         sel = self._select()
         batches = self._round_batches(sel)
         sizes = jnp.asarray([len(self.nodes[i].y) for i in sel], jnp.float32)
-        self.params, self.angle_state, self.prev_delta, metrics = self.round_fn(
-            self.params, self.angle_state, self.prev_delta, batches,
-            jnp.asarray(sel, jnp.int32), sizes, jnp.int32(self.round),
-        )
+        args = (self.params, self.angle_state, self.prev_delta, batches,
+                jnp.asarray(sel, jnp.int32), sizes, jnp.int32(self.round))
+        if self.ef_state is not None:
+            (self.params, self.angle_state, self.prev_delta, metrics,
+             self.ef_state) = self.round_fn(*args, self.ef_state)
+        else:
+            self.params, self.angle_state, self.prev_delta, metrics = (
+                self.round_fn(*args))
         self.round += 1
         return jax.device_get(metrics)
 

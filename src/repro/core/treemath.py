@@ -205,6 +205,43 @@ def tree_ravel_stacked(stacked: PyTree,
     return buf, _cached_unravel(treedef, shapes, dtypes)
 
 
+@functools.lru_cache(maxsize=None)
+def _cached_unravel_rows(treedef, shapes, dtypes) -> Callable:
+    sizes = [math.prod(s) for s in shapes]
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+
+    def unravel_rows(buf: jax.Array) -> PyTree:
+        k = buf.shape[0]
+        leaves = [
+            jax.lax.slice(buf, (0, int(offsets[i])), (k, int(offsets[i + 1])))
+            .reshape((k,) + shapes[i])
+            .astype(dtypes[i])
+            for i in range(len(shapes))
+        ]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    return unravel_rows
+
+
+def tree_unravel_stacked(template: PyTree, buf: jax.Array,
+                         dtype=None) -> PyTree:
+    """Map a (K, N) buffer back to a K-stacked pytree shaped like `template`.
+
+    The inverse of `tree_ravel_stacked`'s forward direction (row k -> client
+    k's stacked leaves; `dtype` overrides the leaf dtype, default the
+    template's). Used by the transport layer's tree-engine fallback:
+    quantize/dequantize the flat buffer, then return to the stacked tree for
+    the per-leaf reference reductions — with dtype=f32 there, so a bf16-leaf
+    template doesn't put a SECOND lossy rounding on the dequantized values
+    that the flat engines (which read the wire directly) never see.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    shapes = tuple(tuple(l.shape[1:]) for l in leaves)
+    dtypes = tuple(jnp.dtype(dtype if dtype is not None else l.dtype)
+                   for l in leaves)
+    return _cached_unravel_rows(treedef, shapes, dtypes)(buf)
+
+
 def segment_mask(tree: PyTree, keep: list) -> jax.Array:
     """(N,) f32 0/1 mask over the ravel order: 1 where the leaf is kept.
 

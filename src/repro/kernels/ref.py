@@ -32,6 +32,28 @@ def round_stats(x: jax.Array, g: jax.Array, mask: jax.Array | None = None):
     return xf @ gf, jnp.sum(xf * xf, axis=1), jnp.dot(gf, gf)
 
 
+def _dequant(values: jax.Array, scales: jax.Array) -> jax.Array:
+    """(K, N) f32 from int8 wire values + per-chunk scales — delegates to
+    the transport layer's own dequantize so the oracle always verifies the
+    fused kernels against the ACTUAL wire semantics (a local re-derivation
+    could drift if the chunk layout ever changes)."""
+    from repro.transport.quantize import QuantizedDelta, dequantize
+
+    return dequantize(QuantizedDelta(values, scales))
+
+
+def weighted_agg_q(w: jax.Array, values: jax.Array, scales: jax.Array):
+    """Dequantize-then-f32 oracle for the fused weighted_agg_q kernel."""
+    x = _dequant(values, scales)
+    return jnp.sum(w.astype(jnp.float32)[:, None] * x, axis=0)
+
+
+def round_stats_q(values: jax.Array, scales: jax.Array, g: jax.Array,
+                  mask: jax.Array | None = None):
+    """Dequantize-then-f32 oracle for the fused round_stats_q kernel."""
+    return round_stats(_dequant(values, scales), g, mask)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True):
     """Naive softmax attention oracle. q/k/v (BH, T, d)."""

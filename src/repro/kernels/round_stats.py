@@ -14,12 +14,19 @@ The client axis is chunked like `weighted_agg`: the grid is (client
 chunks, lane tiles) with the lane dimension minor, so each chunk's
 (K_TILE, 1) output blocks accumulate across consecutive lane steps, and
 sqg accumulates only on the first chunk (g is re-streamed per chunk but
-must be counted once). Any K is served; the former trace-time MAX_K
-rejection is gone.
+must be counted once). Any K is served; a ragged tail chunk (K % K_TILE
+!= 0) is bounds-masked in-kernel, so the buffer is never copied to a
+zero-padded staging array.
 
 An optional (N,) 0/1 segment mask restricts the statistics to a leaf
 subset (the `angle_filter="dense_only"` MoE filter) without materializing
 masked copies of x or g: the mask tile rides along and is applied in-VMEM.
+
+`round_stats_q` is the quantized-transport path (repro.transport): x
+arrives as int8 wire values plus one f32 scale per (client, ROWS*LANE
+chunk); dequantization happens in-register on the loaded tile, so the
+statistics stay one HBM pass over ~4x fewer bytes. g stays f32 — it is
+server-side state and never crosses the wire.
 
 `interpret=True` runs the identical kernel body on CPU.
 """
@@ -38,12 +45,12 @@ from repro.kernels.weighted_agg import (
     LANE,
     ROWS,
     _k_chunks,
-    _pad_axis0,
+    _mask_tail_rows,
     _pad_lanes,
 )
 
 
-def _stats_kernel(x_ref, g_ref, dots_ref, sqs_ref, sqg_ref):
+def _stats_kernel(x_ref, g_ref, dots_ref, sqs_ref, sqg_ref, *, k, tile):
     kc, i = pl.program_id(0), pl.program_id(1)
 
     @pl.when(i == 0)
@@ -55,7 +62,7 @@ def _stats_kernel(x_ref, g_ref, dots_ref, sqs_ref, sqg_ref):
     def _init_g():
         sqg_ref[0, 0] = 0.0
 
-    x = x_ref[...].astype(jnp.float32)  # (KT, ROWS, LANE)
+    x = _mask_tail_rows(x_ref[...].astype(jnp.float32), kc, k=k, tile=tile)
     g = g_ref[...].astype(jnp.float32)  # (ROWS, LANE)
     dots_ref[...] += jnp.sum(x * g[None], axis=(1, 2))[:, None]
     sqs_ref[...] += jnp.sum(x * x, axis=(1, 2))[:, None]
@@ -65,7 +72,8 @@ def _stats_kernel(x_ref, g_ref, dots_ref, sqs_ref, sqg_ref):
         sqg_ref[0, 0] += jnp.sum(g * g)
 
 
-def _stats_kernel_masked(x_ref, g_ref, m_ref, dots_ref, sqs_ref, sqg_ref):
+def _stats_kernel_masked(x_ref, g_ref, m_ref, dots_ref, sqs_ref, sqg_ref,
+                         *, k, tile):
     kc, i = pl.program_id(0), pl.program_id(1)
 
     @pl.when(i == 0)
@@ -78,7 +86,8 @@ def _stats_kernel_masked(x_ref, g_ref, m_ref, dots_ref, sqs_ref, sqg_ref):
         sqg_ref[0, 0] = 0.0
 
     m = m_ref[...].astype(jnp.float32)  # (ROWS, LANE) in {0, 1}
-    x = x_ref[...].astype(jnp.float32) * m[None]
+    x = _mask_tail_rows(x_ref[...].astype(jnp.float32) * m[None], kc,
+                        k=k, tile=tile)
     g = g_ref[...].astype(jnp.float32) * m
     dots_ref[...] += jnp.sum(x * g[None], axis=(1, 2))[:, None]
     sqs_ref[...] += jnp.sum(x * x, axis=(1, 2))[:, None]
@@ -96,17 +105,17 @@ def round_stats(x: jax.Array, g: jax.Array, mask: jax.Array | None = None,
     mask, if given, is an (N,) 0/1 vector; statistics are computed over the
     masked subspace (mask is idempotent, so only one multiply per operand).
     Accumulates in f32 regardless of input dtype. Any K: the client axis is
-    zero-padded to a chunk multiple and gridded (zero rows add zero stats).
+    gridded in chunks, the ragged tail chunk bounds-masked in-kernel.
     """
     K, n = x.shape
     tile, kp = _k_chunks(K)
     block = ROWS * LANE
-    x = _pad_axis0(_pad_lanes(x, block), kp)
+    x = _pad_lanes(x, block)
     g = _pad_lanes(g, block)
     if mask is not None:
         mask = _pad_lanes(mask, block)
     m = x.shape[1] // LANE
-    x3 = x.reshape(kp, m, LANE)
+    x3 = x.reshape(K, m, LANE)
     g2 = g.reshape(m, LANE)
 
     tile_spec = pl.BlockSpec((ROWS, LANE), lambda kc, i: (i, 0))
@@ -123,7 +132,116 @@ def round_stats(x: jax.Array, g: jax.Array, mask: jax.Array | None = None,
 
     kvec_spec = pl.BlockSpec((tile, 1), lambda kc, i: (kc, 0))
     dots, sqs, sqg = pl.pallas_call(
-        kernel,
+        functools.partial(kernel, k=K, tile=tile),
+        grid=(kp // tile, m // ROWS),
+        in_specs=in_specs,
+        out_specs=(kvec_spec, kvec_spec,
+                   pl.BlockSpec((1, 1), lambda kc, i: (0, 0))),
+        out_shape=(
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(*operands)
+    return dots[:K, 0], sqs[:K, 0], sqg[0, 0]
+
+
+def _stats_q_kernel(x_ref, s_ref, g_ref, dots_ref, sqs_ref, sqg_ref,
+                    *, k, tile):
+    kc, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        dots_ref[...] = jnp.zeros_like(dots_ref)
+        sqs_ref[...] = jnp.zeros_like(sqs_ref)
+
+    @pl.when((kc == 0) & (i == 0))
+    def _init_g():
+        sqg_ref[0, 0] = 0.0
+
+    # in-register dequant: one f32 scale per (client, tile)
+    s = s_ref[...]  # (KT, 1)
+    x = _mask_tail_rows(x_ref[...].astype(jnp.float32) * s[:, :, None], kc,
+                        k=k, tile=tile)
+    g = g_ref[...].astype(jnp.float32)
+    dots_ref[...] += jnp.sum(x * g[None], axis=(1, 2))[:, None]
+    sqs_ref[...] += jnp.sum(x * x, axis=(1, 2))[:, None]
+
+    @pl.when(kc == 0)
+    def _accum_g():
+        sqg_ref[0, 0] += jnp.sum(g * g)
+
+
+def _stats_q_kernel_masked(x_ref, s_ref, g_ref, m_ref, dots_ref, sqs_ref,
+                           sqg_ref, *, k, tile):
+    kc, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        dots_ref[...] = jnp.zeros_like(dots_ref)
+        sqs_ref[...] = jnp.zeros_like(sqs_ref)
+
+    @pl.when((kc == 0) & (i == 0))
+    def _init_g():
+        sqg_ref[0, 0] = 0.0
+
+    s = s_ref[...]  # (KT, 1)
+    m = m_ref[...].astype(jnp.float32)  # (ROWS, LANE)
+    x = _mask_tail_rows(
+        x_ref[...].astype(jnp.float32) * s[:, :, None] * m[None], kc,
+        k=k, tile=tile)
+    g = g_ref[...].astype(jnp.float32) * m
+    dots_ref[...] += jnp.sum(x * g[None], axis=(1, 2))[:, None]
+    sqs_ref[...] += jnp.sum(x * x, axis=(1, 2))[:, None]
+
+    @pl.when(kc == 0)
+    def _accum_g():
+        sqg_ref[0, 0] += jnp.sum(g * g)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def round_stats_q(values: jax.Array, scales: jax.Array, g: jax.Array,
+                  mask: jax.Array | None = None, *, interpret: bool = True):
+    """`round_stats` over the int8 wire buffer, dequant fused in-register.
+
+    values: (K, N) int8; scales: (K, ceil(N / (ROWS*LANE))) f32 — the
+    repro.transport per-(client, chunk) layout, one scale per grid tile.
+    g: (N,) f32 (server-side, never quantized). Matches
+    round_stats(dequantize(values, scales), g, mask) to f32 accumulation
+    order. Lane-tail zero padding needs no scale handling (int8 zeros
+    dequantize to zero); the ragged tail client chunk is bounds-masked, so
+    out-of-range scale reads are select-zeroed with the rows they scale.
+    """
+    K, n = values.shape
+    tile, kp = _k_chunks(K)
+    block = ROWS * LANE
+    x = _pad_lanes(values, block)
+    g = _pad_lanes(g, block)
+    if mask is not None:
+        mask = _pad_lanes(mask, block)
+    m = x.shape[1] // LANE
+    c = m // ROWS
+    assert scales.shape == (K, c), (scales.shape, (K, c))
+    x3 = x.reshape(K, m, LANE)
+    g2 = g.reshape(m, LANE)
+
+    tile_spec = pl.BlockSpec((ROWS, LANE), lambda kc, i: (i, 0))
+    in_specs = [
+        pl.BlockSpec((tile, ROWS, LANE), lambda kc, i: (kc, i, 0)),
+        pl.BlockSpec((tile, 1), lambda kc, i: (kc, i)),
+        tile_spec,
+    ]
+    operands = [x3, scales.astype(jnp.float32), g2]
+    kernel = _stats_q_kernel
+    if mask is not None:
+        in_specs.append(tile_spec)
+        operands.append(mask.reshape(m, LANE))
+        kernel = _stats_q_kernel_masked
+
+    kvec_spec = pl.BlockSpec((tile, 1), lambda kc, i: (kc, 0))
+    dots, sqs, sqg = pl.pallas_call(
+        functools.partial(kernel, k=K, tile=tile),
         grid=(kp // tile, m // ROWS),
         in_specs=in_specs,
         out_specs=(kvec_spec, kvec_spec,

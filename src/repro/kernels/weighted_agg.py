@@ -10,7 +10,15 @@ ceil(K / K_TILE) client chunks per output tile and accumulates partial
 sums into the revisited f32 output block (sequential grid steps run in
 order on one TPU core, so revisited output blocks act as accumulators —
 same pattern as `grad_dot.py`). Any K is served with a bounded VMEM
-envelope; the former trace-time MAX_K rejection is gone.
+envelope. Ragged K (K % K_TILE != 0) is handled by an IN-KERNEL bounds
+mask on the tail chunk — the (K, N) buffer is never copied to a padded
+staging buffer (the former `jnp.concatenate` zero-pad is gone; only the
+O(K) weight vector is still padded, which costs nothing).
+
+`weighted_agg_q` is the quantized-transport variant: it reads int8 wire
+values plus one f32 scale per (client, CHUNK)-tile and dequantizes
+in-register, so aggregation over a compressed uplink stays a single HBM
+pass that moves ~4x fewer bytes (see repro.transport).
 
 Also provides `batched_dot`: u_k = <x_k, g> for all K clients in one pass
 (the per-client angle numerators), sharing the same tiling.
@@ -27,10 +35,8 @@ LANE = 128
 ROWS = 128  # per-client block: 128*128*4 B = 64 KiB
 # Client-axis chunk: 32*128*128*4 B = 2 MiB per x tile — small enough to
 # leave VMEM room for double buffering on a ~16 MiB core. K <= K_TILE runs
-# as one chunk of size K; larger K is zero-padded to a K_TILE multiple and
-# gridded. NOTE: the zero-pad is a jnp.concatenate, i.e. one buffer copy
-# whenever K % K_TILE != 0 — keep cohorts at multiples of 32 on the hot
-# path (a tail-chunk call to avoid the copy is a ROADMAP next step).
+# as one chunk of size K; larger K is gridded, with the ragged tail chunk
+# bounds-masked inside the kernel (no buffer copy).
 K_TILE = 32
 
 
@@ -41,7 +47,8 @@ def _k_chunks(k: int) -> tuple[int, int]:
 
 
 def _pad_axis0(x: jax.Array, kp: int) -> jax.Array:
-    """Zero-pad axis 0 to kp rows (zero clients contribute zero stats)."""
+    """Zero-pad axis 0 to kp rows — used only for O(K) weight/scale
+    vectors; the (K, N) buffers stay unpadded (in-kernel tail mask)."""
     k = x.shape[0]
     if kp == k:
         return x
@@ -57,30 +64,53 @@ def _pad_lanes(x: jax.Array, block: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def _agg_kernel(w_ref, x_ref, y_ref):
-    @pl.when(pl.program_id(1) == 0)
+def _mask_tail_rows(x: jax.Array, kc, *, k: int, tile: int) -> jax.Array:
+    """Select-zero rows past K in the ragged tail client chunk.
+
+    Blocks past the array edge read unspecified values (Pallas pads the
+    partial block); a select (not a multiply) guarantees even NaN garbage
+    cannot poison the f32 accumulators. Trace-time no-op when K divides
+    into whole chunks.
+    """
+    if k % tile == 0:
+        return x
+    rows = jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0) + kc * tile
+    valid = rows < k  # (tile, 1)
+    return jnp.where(valid[:, :, None], x, jnp.zeros_like(x))
+
+
+def _agg_kernel(w_ref, x_ref, y_ref, *, k, tile):
+    kc = pl.program_id(1)
+
+    @pl.when(kc == 0)
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
     w = w_ref[...].astype(jnp.float32)  # (KT, 1)
-    x = x_ref[...].astype(jnp.float32)  # (KT, ROWS, LANE)
+    x = _mask_tail_rows(x_ref[...].astype(jnp.float32), kc, k=k, tile=tile)
     y_ref[...] += jnp.sum(w[:, :, None] * x, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def weighted_agg(w: jax.Array, x: jax.Array, *, interpret: bool = True):
-    """y[n] = sum_k w[k] x[k, n]. x: (K, N) any float dtype; f32 accumulate."""
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def weighted_agg(w: jax.Array, x: jax.Array, *, interpret: bool = True,
+                 out_dtype=None):
+    """y[n] = sum_k w[k] x[k, n]. x: (K, N) any float dtype; f32 accumulate.
+
+    `out_dtype` overrides the result dtype (default: x.dtype) — pass
+    jnp.float32 when a bf16 wire buffer must aggregate into the server's
+    f32 reference delta without a lossy round-trip through bf16.
+    """
     K, n = x.shape
     tile, kp = _k_chunks(K)
-    x = _pad_axis0(_pad_lanes(x, ROWS * LANE), kp)
+    x = _pad_lanes(x, ROWS * LANE)
     m = x.shape[1] // LANE
-    x3 = x.reshape(kp, m, LANE)
+    x3 = x.reshape(K, m, LANE)
     w2 = _pad_axis0(w.reshape(K).astype(jnp.float32), kp).reshape(kp, 1)
 
     # grid order: client chunks are the MINOR dimension, so each output
     # tile is revisited across consecutive steps while kc accumulates.
     y = pl.pallas_call(
-        _agg_kernel,
+        functools.partial(_agg_kernel, k=K, tile=tile),
         grid=(m // ROWS, kp // tile),
         in_specs=[
             pl.BlockSpec((tile, 1), lambda i, kc: (kc, 0)),
@@ -90,15 +120,66 @@ def weighted_agg(w: jax.Array, x: jax.Array, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((m, LANE), jnp.float32),
         interpret=interpret,
     )(w2, x3)
-    return y.reshape(-1)[:n].astype(x.dtype)
+    return y.reshape(-1)[:n].astype(out_dtype or x.dtype)
 
 
-def _bdot_kernel(x_ref, g_ref, out_ref):
+def _agg_q_kernel(ws_ref, x_ref, y_ref, *, k, tile):
+    kc = pl.program_id(1)
+
+    @pl.when(kc == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    ws = ws_ref[...]  # (KT, 1) f32 — weight x per-chunk dequant scale
+    x = _mask_tail_rows(
+        x_ref[...].astype(jnp.float32) * ws[:, :, None], kc, k=k, tile=tile)
+    y_ref[...] += jnp.sum(x, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_agg_q(w: jax.Array, values: jax.Array, scales: jax.Array, *,
+                   interpret: bool = True):
+    """y[n] = sum_k w[k] * scale[k, n // CHUNK] * values[k, n], f32 out.
+
+    values: (K, N) int8 wire buffer; scales: (K, ceil(N / (ROWS*LANE)))
+    f32 per-(client, chunk) dequant multipliers (repro.transport layout).
+    The weight and the scale fold into ONE multiplier per input tile, so
+    fused dequant costs a single extra (K_TILE, 1) VMEM operand per step.
+    Lane-tail zero padding needs no scale handling: int8 zeros dequantize
+    to zero under any scale.
+    """
+    K, n = values.shape
+    tile, kp = _k_chunks(K)
+    x = _pad_lanes(values, ROWS * LANE)
+    m = x.shape[1] // LANE
+    c = m // ROWS
+    assert scales.shape == (K, c), (scales.shape, (K, c))
+    x3 = x.reshape(K, m, LANE)
+    ws = _pad_axis0(
+        w.reshape(K, 1).astype(jnp.float32) * scales.astype(jnp.float32), kp)
+
+    y = pl.pallas_call(
+        functools.partial(_agg_q_kernel, k=K, tile=tile),
+        grid=(m // ROWS, kp // tile),
+        in_specs=[
+            pl.BlockSpec((tile, 1), lambda i, kc: (kc, i)),
+            pl.BlockSpec((tile, ROWS, LANE), lambda i, kc: (kc, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, LANE), lambda i, kc: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, LANE), jnp.float32),
+        interpret=interpret,
+    )(ws, x3)
+    return y.reshape(-1)[:n]
+
+
+def _bdot_kernel(x_ref, g_ref, out_ref, *, k, tile):
+    kc = pl.program_id(0)
+
     @pl.when(pl.program_id(1) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    x = x_ref[...].astype(jnp.float32)  # (KT, ROWS, LANE)
+    x = _mask_tail_rows(x_ref[...].astype(jnp.float32), kc, k=k, tile=tile)
     g = g_ref[...].astype(jnp.float32)  # (ROWS, LANE)
     out_ref[...] += jnp.sum(x * g[None], axis=(1, 2))[:, None]
 
@@ -108,14 +189,14 @@ def batched_dot(x: jax.Array, g: jax.Array, *, interpret: bool = True):
     """u[k] = <x[k], g>. x: (K, N), g: (N,)."""
     K, n = x.shape
     tile, kp = _k_chunks(K)
-    x = _pad_axis0(_pad_lanes(x, ROWS * LANE), kp)
+    x = _pad_lanes(x, ROWS * LANE)
     g = _pad_lanes(g, ROWS * LANE)
     m = x.shape[1] // LANE
-    x3 = x.reshape(kp, m, LANE)
+    x3 = x.reshape(K, m, LANE)
     g2 = g.reshape(m, LANE)
 
     out = pl.pallas_call(
-        _bdot_kernel,
+        functools.partial(_bdot_kernel, k=K, tile=tile),
         grid=(kp // tile, m // ROWS),
         in_specs=[
             pl.BlockSpec((tile, ROWS, LANE), lambda kc, i: (kc, i, 0)),

@@ -1,0 +1,24 @@
+"""Delta transport: the wire format between client uplink and server.
+
+`quantize` compresses a client-stacked (K, N) f32 delta buffer into the
+configured wire dtype (f32 passthrough, bf16 cast, or int8 with per-chunk
+f32 scales aligned to the round kernels' tiling); the fused Pallas kernels
+(`kernels.round_stats.round_stats_q`, `kernels.weighted_agg.weighted_agg_q`)
+read the wire buffer directly and dequantize in-register, so the server's
+stats + aggregation stay a single HBM pass over ~4x fewer bytes.
+
+Contract (ROADMAP): transport="f32" is the reference wire format; the tree
+engine never reads quantized buffers directly — it dequantizes back to the
+stacked tree and runs the per-leaf reference reductions.
+"""
+from repro.transport.quantize import (  # noqa: F401
+    CHUNK,
+    TRANSPORTS,
+    QuantizedDelta,
+    dequantize,
+    init_error_feedback,
+    num_chunks,
+    quantize,
+    roundtrip,
+    wire_bytes,
+)

@@ -1,0 +1,123 @@
+"""Client-uplink delta quantization with kernel-aligned per-chunk scales.
+
+Wire formats over the flat (K, N) client-delta buffer:
+
+* ``f32``  — identity; the reference wire format.
+* ``bf16`` — elementwise cast, 2 bytes/param, no side data. Dequant is the
+  in-kernel ``astype(f32)`` the round kernels already perform.
+* ``int8`` — symmetric per-chunk quantization, 1 byte/param plus one f32
+  scale per (client, chunk). q = round(x / s) in [-127, 127] with
+  s = absmax(chunk) / 127.
+
+The chunk is ``CHUNK = ROWS * LANE`` elements — exactly the (ROWS, LANE)
+tile each grid step of `kernels.round_stats` / `kernels.weighted_agg`
+streams per client, so the fused dequant path loads ONE scale per input
+tile: scales[k, c] pairs with values[k, c*CHUNK:(c+1)*CHUNK] and chunk c
+is grid step i == c of the lane dimension. Zero-padding the lane tail of
+a value buffer never needs scale padding: int8 zeros dequantize to zero
+under any scale.
+
+Error feedback (optional, `FLConfig(error_feedback=True)`): the residual
+x - dequantize(quantize(x)) is carried per population client and added to
+the next round's delta before quantization, so FedAdp's angle statistics
+see an unbiased compressed signal over time (EF-SGD; cf. the
+resource-constrained uplink motivation in PAPERS.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.weighted_agg import LANE, ROWS
+
+# One f32 scale per CHUNK wire values per client — 4/CHUNK bytes of side
+# data per parameter (~0.02% at the default 16384-element chunk).
+CHUNK = ROWS * LANE
+
+TRANSPORTS = ("f32", "bf16", "int8")
+
+
+class QuantizedDelta(NamedTuple):
+    """Wire-format view of a (K, N) client-delta buffer.
+
+    values: (K, N) in the wire dtype (f32 / bf16 / int8).
+    scales: (K, num_chunks(N)) f32 for int8, else None — per-(client,
+      chunk) dequant multipliers aligned to the kernels' lane tiling.
+    """
+
+    values: jax.Array
+    scales: Optional[jax.Array]
+
+    @property
+    def transport(self) -> str:
+        return {jnp.dtype(jnp.float32): "f32",
+                jnp.dtype(jnp.bfloat16): "bf16",
+                jnp.dtype(jnp.int8): "int8"}[jnp.dtype(self.values.dtype)]
+
+
+def num_chunks(n: int) -> int:
+    """Scale columns for an N-wide buffer (== kernel lane-tile grid steps)."""
+    return max(1, -(-n // CHUNK))
+
+
+def _pad_to_chunks(flat: jax.Array) -> jax.Array:
+    pad = (-flat.shape[1]) % CHUNK
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat
+
+
+def quantize(flat: jax.Array, transport: str) -> QuantizedDelta:
+    """Compress a (K, N) f32 delta buffer into the wire format."""
+    if transport not in TRANSPORTS:
+        raise ValueError(f"unknown transport {transport!r} "
+                         f"(expected one of {TRANSPORTS})")
+    if transport == "f32":
+        return QuantizedDelta(flat.astype(jnp.float32), None)
+    if transport == "bf16":
+        return QuantizedDelta(flat.astype(jnp.bfloat16), None)
+    k, n = flat.shape
+    c = num_chunks(n)
+    xp = _pad_to_chunks(flat.astype(jnp.float32)).reshape(k, c, CHUNK)
+    absmax = jnp.max(jnp.abs(xp), axis=2)
+    # all-zero chunks get scale 1 (quantize to zeros) instead of 0/0
+    scales = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xp / scales[:, :, None]), -127.0, 127.0)
+    values = q.astype(jnp.int8).reshape(k, c * CHUNK)[:, :n]
+    return QuantizedDelta(values, scales)
+
+
+def dequantize(q: QuantizedDelta) -> jax.Array:
+    """(K, N) f32 reconstruction — the reference the fused kernels match."""
+    if q.scales is None:
+        return q.values.astype(jnp.float32)
+    k, n = q.values.shape
+    c = q.scales.shape[1]
+    xp = _pad_to_chunks(q.values.astype(jnp.float32)).reshape(k, c, CHUNK)
+    return (xp * q.scales[:, :, None]).reshape(k, c * CHUNK)[:, :n]
+
+
+def roundtrip(flat: jax.Array, transport: str) -> jax.Array:
+    """dequantize(quantize(x)) — the tree engine's dequantize-then-reference
+    view of the wire (it never reads quantized buffers directly)."""
+    if transport == "f32":
+        return flat.astype(jnp.float32)
+    return dequantize(quantize(flat, transport))
+
+
+def wire_bytes(k: int, n: int, transport: str) -> int:
+    """Uplink bytes for K clients x N params (values + scale side data)."""
+    if transport == "f32":
+        return k * n * 4
+    if transport == "bf16":
+        return k * n * 2
+    if transport == "int8":
+        return k * n * 1 + k * num_chunks(n) * 4
+    raise ValueError(f"unknown transport {transport!r}")
+
+
+def init_error_feedback(num_clients: int, n: int) -> jax.Array:
+    """(num_clients, N) f32 residual carry, one row per population slot."""
+    return jnp.zeros((num_clients, n), jnp.float32)

@@ -186,21 +186,67 @@ def test_flat_engine_k128():
         np.asarray(m_t[0]["theta"]), np.asarray(m_f[0]["theta"]), atol=1e-5)
 
 
-def test_flat_sharded_requires_mesh_and_divisible_k():
+def test_flat_sharded_requires_mesh():
     params, loss_fn, _ = _toy_problem()
     cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
                       engine="flat_sharded")
     with pytest.raises(ValueError, match="mesh"):
         fl.make_round_fn(loss_fn, cfg)
-    mesh = jax.make_mesh((1,), ("data",))
-    cfg3 = fl.FLConfig(num_clients=3, clients_per_round=3, local_steps=3,
-                      engine="flat_sharded")
-    # 1-way mesh divides anything; a 2-way mesh cannot split K=3
-    fl.make_round_fn(loss_fn, cfg3, mesh=mesh)
-    if jax.device_count() >= 2:
-        mesh2 = jax.make_mesh((2,), ("data",))
-        with pytest.raises(ValueError, match="divisible"):
-            fl.make_round_fn(loss_fn, cfg3, mesh=mesh2)
+
+
+def test_flat_sharded_nondivisible_k_matches_tree_subprocess():
+    """K % shards != 0 no longer raises: the client axis is zero-padded
+    before sharding (padded rows carry zero deltas and zero data size, so
+    they get exactly zero weight and zero stats). K=13 on an 8-way mesh is
+    pinned against the tree engine, for the f32 and int8 wires."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import fl
+        from repro.core.weighting import AngleState
+        K, d, tau, B = 13, 12, 2, 4
+        rng = np.random.default_rng(0)
+        params = {"w": jnp.zeros((d, 1), jnp.float32),
+                  "b": jnp.zeros((1,), jnp.float32)}
+        X = jnp.asarray(rng.normal(size=(K, tau, B, d)).astype(np.float32))
+        wt = rng.normal(size=(K, d, 1)).astype(np.float32)
+        Y = jnp.asarray(np.einsum("ktbd,kde->ktbe", X, wt))
+        def loss_fn(p, batch):
+            x, y = batch
+            return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+        mesh = jax.make_mesh((8,), ("data",))
+        sel = jnp.arange(K, dtype=jnp.int32)
+        sizes = jnp.asarray(np.linspace(10.0, 40.0, K, dtype=np.float32))
+        for tr in ("f32", "int8"):
+            outs = {}
+            for engine in ("tree", "flat_sharded"):
+                cfg = fl.FLConfig(num_clients=K, clients_per_round=K,
+                                  local_steps=tau, method="fedadp",
+                                  engine=engine, transport=tr, base_lr=0.05)
+                rf = jax.jit(fl.make_round_fn(loss_fn, cfg, mesh=mesh))
+                p, state = params, AngleState.init(K)
+                prev = fl.init_prev_delta(params)
+                with mesh:
+                    for r in range(2):
+                        p, state, prev, m = rf(p, state, prev, (X, Y), sel,
+                                               sizes, jnp.int32(r))
+                outs[engine] = (p, m)
+            jax.tree.map(lambda a, b: np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5),
+                outs["tree"][0], outs["flat_sharded"][0])
+            np.testing.assert_allclose(
+                np.asarray(outs["tree"][1]["weights"]),
+                np.asarray(outs["flat_sharded"][1]["weights"]),
+                rtol=1e-5, atol=1e-6)
+        print("RAGGED_SHARD_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "RAGGED_SHARD_OK" in out.stdout, out.stderr[-2000:]
 
 
 def test_flat_sharded_single_device_matches_flat():

@@ -1,0 +1,418 @@
+"""Quantized delta transport: wire-format round trips, fused-dequant kernel
+parity, end-to-end engine equivalence, and error-feedback carry.
+
+The transport contract (ROADMAP): transport="f32" is the reference wire
+format; the tree engine never reads quantized buffers directly — it
+dequantizes back to the stacked tree and runs the per-leaf reference
+reductions. The fused kernels (`round_stats_q`, `weighted_agg_q`) must
+therefore match the dequantize-then-f32 oracles bit-for-tolerance, which
+makes tree == flat == flat_sharded hold under every transport.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import transport
+from repro.core import fl, fl_shard_map, treemath
+from repro.core.weighting import AngleState
+from repro.kernels import ref, round_stats, weighted_agg
+from repro.transport.quantize import CHUNK
+
+# K values straddling the K_TILE=32 client-chunk boundary (degenerate
+# single chunk / one full + ragged chunk / exact multiples), N values
+# straddling the CHUNK=ROWS*LANE=16384 scale-chunk boundary.
+CHUNK_KS = [1, 33, 64]
+NS = [100, CHUNK + 1, 2 * CHUNK + 600]
+
+
+def _chunky(key, k, n):
+    """(k, n) normal data whose per-chunk magnitude varies by orders of
+    magnitude, so a kernel reading the WRONG scale column fails loudly."""
+    x = jax.random.normal(key, (k, n), jnp.float32)
+    cols = jnp.arange(n) // CHUNK
+    return x * (10.0 ** cols.astype(jnp.float32))[None, :]
+
+
+# ---------------------------------------------------------------- quantize
+
+
+@pytest.mark.parametrize("n", NS)
+def test_int8_roundtrip_error_bound(n):
+    """|x - deq(quant(x))| <= scale/2 elementwise — round-to-nearest with
+    s = absmax/127 never clips, so half an int8 step bounds the error."""
+    x = _chunky(jax.random.key(0), 5, n)
+    q = transport.quantize(x, "int8")
+    assert q.values.dtype == jnp.int8
+    assert q.scales.shape == (5, transport.num_chunks(n))
+    err = np.abs(np.asarray(x) - np.asarray(transport.dequantize(q)))
+    bound = np.repeat(np.asarray(q.scales), CHUNK, axis=1)[:, :n]
+    assert np.all(err <= 0.5 * bound * (1 + 1e-6) + 1e-8)
+
+
+def test_int8_zero_chunk_is_exact():
+    """All-zero chunks must not divide by zero and must reconstruct zero."""
+    x = jnp.zeros((2, CHUNK + 7), jnp.float32).at[1, CHUNK + 3].set(3.0)
+    q = transport.quantize(x, "int8")
+    np.testing.assert_array_equal(np.asarray(q.scales)[:, 0], [1.0, 1.0])
+    np.testing.assert_allclose(np.asarray(transport.dequantize(q)),
+                               np.asarray(x), atol=3.0 / 254)
+
+
+def test_bf16_roundtrip_error_bound():
+    """bf16 keeps 8 significand bits: relative error <= 2^-8."""
+    x = _chunky(jax.random.key(1), 3, 2000)
+    rt = transport.roundtrip(x, "bf16")
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(x), rtol=2.0**-8)
+
+
+def test_f32_roundtrip_is_identity():
+    x = _chunky(jax.random.key(2), 2, 300)
+    np.testing.assert_array_equal(np.asarray(transport.roundtrip(x, "f32")),
+                                  np.asarray(x))
+
+
+def test_quantize_rejects_unknown_transport():
+    with pytest.raises(ValueError, match="transport"):
+        transport.quantize(jnp.zeros((1, 8)), "int4")
+
+
+def test_transport_property_and_wire_bytes():
+    x = jnp.ones((4, CHUNK + 1), jnp.float32)
+    assert transport.quantize(x, "int8").transport == "int8"
+    assert transport.quantize(x, "bf16").transport == "bf16"
+    assert transport.quantize(x, "f32").transport == "f32"
+    n = CHUNK + 1  # 2 scale chunks
+    assert transport.wire_bytes(4, n, "f32") == 4 * n * 4
+    assert transport.wire_bytes(4, n, "bf16") == 4 * n * 2
+    assert transport.wire_bytes(4, n, "int8") == 4 * n + 4 * 2 * 4
+    # the acceptance ratio: int8 moves ~4x fewer bytes than f32
+    assert transport.wire_bytes(4, n, "f32") > 3.9 * transport.wire_bytes(
+        4, n, "int8")
+
+
+def test_tree_unravel_stacked_roundtrip():
+    """transport's tree-engine fallback: ravel -> (K, N) -> back to the
+    stacked tree, original shapes and dtypes restored."""
+    stacked = {
+        "a": jax.random.normal(jax.random.key(0), (3, 5, 2), jnp.float32),
+        "b": {"c": jax.random.normal(jax.random.key(1), (3, 7), jnp.bfloat16)},
+    }
+    flat, _ = treemath.tree_ravel_stacked(stacked)
+    back = treemath.tree_unravel_stacked(stacked, flat)
+    jax.tree.map(
+        lambda x, y: (np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32), atol=1e-6),
+            None)[1] or None, stacked, back)
+    assert back["b"]["c"].dtype == jnp.bfloat16
+
+
+# ------------------------------------------------- fused-dequant kernels
+
+
+@pytest.mark.parametrize("k", CHUNK_KS)
+@pytest.mark.parametrize("n", NS)
+def test_round_stats_q_matches_dequant_oracle(k, n):
+    """Fused in-register dequant == dequantize-then-f32 reference, across
+    ragged client chunks AND chunk-boundary scales."""
+    q = transport.quantize(_chunky(jax.random.key(0), k, n), "int8")
+    g = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+    got = round_stats.round_stats_q(q.values, q.scales, g)
+    want = ref.round_stats_q(q.values, q.scales, g)
+    for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(ww), rtol=1e-3,
+                                   atol=1e-2, err_msg=name)
+
+
+@pytest.mark.parametrize("k", CHUNK_KS)
+@pytest.mark.parametrize("n", NS)
+def test_weighted_agg_q_matches_dequant_oracle(k, n):
+    q = transport.quantize(_chunky(jax.random.key(2), k, n), "int8")
+    w = jax.random.uniform(jax.random.key(3), (k,), jnp.float32)
+    got = weighted_agg.weighted_agg_q(w, q.values, q.scales)
+    want = ref.weighted_agg_q(w, q.values, q.scales)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_round_stats_q_masked_across_chunk_boundary():
+    """Segment mask spanning the scale-chunk boundary + the K=33 ragged
+    client chunk: masked fused stats == masked dequant oracle, and the
+    mask must actually bite."""
+    k, n = 33, 2 * CHUNK + 600
+    q = transport.quantize(_chunky(jax.random.key(4), k, n), "int8")
+    g = jax.random.normal(jax.random.key(5), (n,), jnp.float32)
+    mask = jnp.ones((n,), jnp.float32).at[CHUNK - 500:CHUNK + 500].set(0.0)
+    got = round_stats.round_stats_q(q.values, q.scales, g, mask)
+    want = ref.round_stats_q(q.values, q.scales, g, mask)
+    for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(ww), rtol=1e-3,
+                                   err_msg=name)
+    full = round_stats.round_stats_q(q.values, q.scales, g)
+    assert not np.allclose(np.asarray(got[1]), np.asarray(full[1]))
+
+
+@pytest.mark.parametrize("k", CHUNK_KS)
+def test_bf16_wire_through_plain_kernels(k):
+    """bf16 transport has no scales: the plain kernels' in-VMEM astype IS
+    the dequant, and out_dtype=f32 must avoid a lossy bf16 round-trip."""
+    n = CHUNK + 1
+    x = jax.random.normal(jax.random.key(6), (k, n), jnp.float32)
+    wire = transport.quantize(x, "bf16").values
+    w = jax.random.uniform(jax.random.key(7), (k,), jnp.float32)
+    got = weighted_agg.weighted_agg(w, wire, out_dtype=jnp.float32)
+    assert got.dtype == jnp.float32
+    want = ref.weighted_agg(w, wire.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3,
+                               atol=1e-4)
+
+
+# ------------------------------------------------- end-to-end transports
+
+
+K = 4
+
+
+def _toy_problem(K=K, tau=3, B=8, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.zeros((d, 1), jnp.float32),
+              "b": jnp.zeros((1,), jnp.float32)}
+    X = rng.normal(size=(K, tau, B, d)).astype(np.float32)
+    w_true = rng.normal(size=(K, d, 1)).astype(np.float32)
+    Y = np.einsum("ktbd,kde->ktbe", X, w_true)
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    return params, loss_fn, (jnp.asarray(X), jnp.asarray(Y))
+
+
+def _run(engine, transport_name, method="fedadp", rounds=3, k=K, mesh=None,
+         error_feedback=False):
+    params, loss_fn, batches = _toy_problem(K=k)
+    cfg = fl.FLConfig(num_clients=k, clients_per_round=k, local_steps=3,
+                      method=method, engine=engine, transport=transport_name,
+                      error_feedback=error_feedback, base_lr=0.05)
+    rf = jax.jit(fl.make_round_fn(loss_fn, cfg, mesh=mesh))
+    state = AngleState.init(k)
+    prev = fl.init_prev_delta(params)
+    sel = jnp.arange(k, dtype=jnp.int32)
+    sizes = jnp.asarray(10.0 * (1.0 + np.arange(k, dtype=np.float32)))
+    ef = None
+    if error_feedback:
+        n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+        ef = transport.init_error_feedback(k, n)
+    for r in range(rounds):
+        args = (params, state, prev, batches, sel, sizes, jnp.int32(r))
+        if error_feedback:
+            params, state, prev, m, ef = rf(*args, ef)
+        else:
+            params, state, prev, m = rf(*args)
+    return params, state, m, ef
+
+
+def _assert_trees_close(a, b, atol=1e-5):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-5, atol=atol), a, b)
+
+
+@pytest.mark.parametrize("transport_name", ["bf16", "int8"])
+@pytest.mark.parametrize("method", ["fedadp", "fedavg"])
+def test_quantized_engines_agree(transport_name, method):
+    """tree (dequantize-then-reference) == flat (fused-dequant kernels) ==
+    flat_sharded (1-way mesh) under a quantized wire, multi-round."""
+    mesh = jax.make_mesh((1,), ("data",))
+    p_t, s_t, m_t, _ = _run("tree", transport_name, method)
+    p_f, s_f, m_f, _ = _run("flat", transport_name, method)
+    p_s, s_s, m_s, _ = _run("flat_sharded", transport_name, method, mesh=mesh)
+    _assert_trees_close(p_t, p_f)
+    _assert_trees_close(p_t, p_s)
+    np.testing.assert_allclose(s_t.smoothed, s_f.smoothed, atol=1e-5)
+    np.testing.assert_allclose(s_t.smoothed, s_s.smoothed, atol=1e-5)
+    for m_other in (m_f, m_s):
+        np.testing.assert_allclose(np.asarray(m_t["weights"]),
+                                   np.asarray(m_other["weights"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("engine", ["tree", "flat"])
+def test_int8_close_to_f32_reference(engine):
+    """Compression must perturb, not distort: int8 trajectories stay near
+    the f32 wire (the convergence-parity pin runs in benchmarks/run.py)."""
+    p_q, s_q, m_q, _ = _run(engine, "int8")
+    p_f, s_f, m_f, _ = _run(engine, "f32")
+    _assert_trees_close(p_q, p_f, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(m_q["theta"]),
+                               np.asarray(m_f["theta"]), atol=5e-2)
+    # ... but int8 is genuinely lossy (otherwise this test proves nothing)
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(p_q), jax.tree.leaves(p_f)))
+
+
+def test_int8_tree_matches_flat_with_bf16_leaves():
+    """bf16-leaf model under the int8 wire: the tree engine's dequantized
+    reconstruction must stay f32 (a second rounding through the bf16 leaf
+    dtype would push the angle stats off the flat engine, which streams
+    the wire directly), and the param dtype must survive the round."""
+    rng = np.random.default_rng(0)
+    d = 12
+    X = jnp.asarray(rng.normal(size=(K, 3, 8, d)).astype(np.float32))
+    w_true = rng.normal(size=(K, d, 1)).astype(np.float32)
+    Y = jnp.asarray(np.einsum("ktbd,kde->ktbe", X, w_true))
+
+    def loss_fn(p, batch):
+        x, y = batch
+        pred = x @ p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+        return jnp.mean((pred - y) ** 2)
+
+    outs = {}
+    for engine in ("tree", "flat"):
+        params = {"w": jnp.zeros((d, 1), jnp.bfloat16),
+                  "b": jnp.zeros((1,), jnp.bfloat16)}
+        cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                          method="fedadp", engine=engine, transport="int8",
+                          base_lr=0.05)
+        rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
+        state = AngleState.init(K)
+        prev = fl.init_prev_delta(params)
+        sel = jnp.arange(K, dtype=jnp.int32)
+        sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+        for r in range(3):
+            params, state, prev, m = rf(params, state, prev, (X, Y), sel,
+                                        sizes, jnp.int32(r))
+        outs[engine] = (params, m)
+    for a, b in zip(jax.tree.leaves(outs["tree"][0]),
+                    jax.tree.leaves(outs["flat"][0])):
+        assert a.dtype == jnp.bfloat16 and b.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-2)
+    # stats see identical f32 dequantized values in both engines
+    np.testing.assert_allclose(np.asarray(outs["tree"][1]["theta"]),
+                               np.asarray(outs["flat"][1]["theta"]),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("k", [1, 33])
+def test_int8_flat_ragged_k_end_to_end(k):
+    """Quantized wire + ragged client chunk (tail bounds mask) together."""
+    p_t, s_t, m_t, _ = _run("tree", "int8", rounds=2, k=k)
+    p_f, s_f, m_f, _ = _run("flat", "int8", rounds=2, k=k)
+    _assert_trees_close(p_t, p_f)
+    np.testing.assert_allclose(np.asarray(m_t["theta"]),
+                               np.asarray(m_f["theta"]), atol=1e-5)
+
+
+# ---------------------------------------------------------- error feedback
+
+
+def test_error_feedback_round1_residual_is_quant_error():
+    """With zero-initialized EF state, round 1's carried residual must be
+    exactly flat(deltas) - dequantize(quantize(flat(deltas)))."""
+    params, loss_fn, batches = _toy_problem()
+    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                      method="fedadp", engine="flat", transport="int8",
+                      error_feedback=True, base_lr=0.05)
+    deltas, _ = jax.vmap(
+        lambda b: fl.local_update(loss_fn, params, b, cfg.base_lr)
+    )(batches)
+    flat0, _ = treemath.tree_ravel_stacked(deltas)
+    want = np.asarray(flat0 - transport.roundtrip(flat0, "int8"))
+    _, _, _, ef = _run("flat", "int8", rounds=1, error_feedback=True)
+    np.testing.assert_allclose(np.asarray(ef), want, atol=1e-7)
+    assert np.abs(want).sum() > 0  # quantization actually dropped signal
+
+
+def test_error_feedback_carries_across_rounds():
+    """Round 2 replays round 1's residual into the uplink: the EF
+    trajectory must diverge from the uncompensated int8 one, and the
+    carried residual stays within the per-chunk quantization bound."""
+    p_ef, _, m_ef, ef = _run("flat", "int8", rounds=3, error_feedback=True)
+    p_nc, _, m_nc, _ = _run("flat", "int8", rounds=3)
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(p_ef), jax.tree.leaves(p_nc)))
+    assert np.all(np.isfinite(np.asarray(ef)))
+    # residual of a quantized signal is at most half a quant step of the
+    # (residual-boosted) signal — loosely, it must not blow up round over
+    # round: bound by the largest per-round delta magnitude seen.
+    assert np.abs(np.asarray(ef)).max() < 1.0
+
+
+def test_error_feedback_requires_quantized_transport():
+    params, loss_fn, _ = _toy_problem()
+    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                      transport="f32", error_feedback=True)
+    with pytest.raises(ValueError, match="error_feedback"):
+        fl.make_round_fn(loss_fn, cfg)
+
+
+def test_error_feedback_requires_state_argument():
+    params, loss_fn, batches = _toy_problem()
+    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                      engine="flat", transport="int8", error_feedback=True)
+    rf = fl.make_round_fn(loss_fn, cfg)
+    state = AngleState.init(K)
+    with pytest.raises(ValueError, match="ef_state"):
+        rf(params, state, fl.init_prev_delta(params), batches,
+           jnp.arange(K, dtype=jnp.int32), jnp.ones((K,)), jnp.int32(0))
+
+
+# ------------------------------------------------------------- validation
+
+
+def test_unknown_transport_rejected():
+    params, loss_fn, _ = _toy_problem()
+    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                      transport="fp8")
+    with pytest.raises(ValueError, match="transport"):
+        fl.make_round_fn(loss_fn, cfg)
+
+
+def test_sequential_mode_rejects_quantized_transport():
+    params, loss_fn, _ = _toy_problem()
+    cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
+                      mode="sequential", transport="int8")
+    with pytest.raises(ValueError, match="sequential"):
+        fl.make_round_fn(loss_fn, cfg)
+
+
+def test_shard_map_tree_engine_rejects_quantized_transport():
+    """The ROADMAP contract: the tree engine never reads quantized buffers;
+    fedadp_aggregate must refuse rather than silently dequantize."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from jax.sharding import PartitionSpec as P
+    with pytest.raises(ValueError, match="tree"):
+        fl_shard_map.fedadp_aggregate(mesh, {"a": P("data")}, alpha=5.0,
+                                      engine="tree", transport="int8")
+
+
+def test_shard_map_flat_engine_quantized_matches_f32_loosely():
+    """fedadp_aggregate(engine="flat", transport="int8") on a 1-way mesh:
+    runs end-to-end and stays near the f32 wire."""
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    Kk = 4
+    deltas = {
+        "a": jax.random.normal(jax.random.key(0), (Kk, 8, 6)) * 0.1,
+        "b": jax.random.normal(jax.random.key(1), (Kk, 16)) * 0.1,
+    }
+    pspecs = {"a": P("data"), "b": P("data")}
+    sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+    sm_prev = jnp.zeros((Kk,))
+    cnt_prev = jnp.zeros((Kk,), jnp.int32)
+    outs = {}
+    for tr in ("f32", "int8"):
+        agg = fl_shard_map.fedadp_aggregate(mesh, pspecs, alpha=5.0,
+                                            engine="flat", transport=tr)
+        with mesh:
+            outs[tr] = jax.jit(agg)(deltas, sizes, sm_prev, cnt_prev)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-3),
+        outs["f32"][0], outs["int8"][0])
+    np.testing.assert_allclose(np.asarray(outs["f32"][1]),
+                               np.asarray(outs["int8"][1]), atol=5e-2)
