@@ -44,6 +44,9 @@ def run_fl(
     eval_every: int = 2,
     engine: str = "tree",
     transport: str = "f32",
+    downlink: str = "f32",
+    group_size: int = 512,
+    mesh=None,
 ):
     """Returns (history, seconds_per_round)."""
     train, test = get_task()
@@ -53,9 +56,11 @@ def run_fl(
     cfg = fl.FLConfig(
         num_clients=n, clients_per_round=n, local_steps=samples // batch_size,
         method=method, alpha=alpha, base_lr=base_lr,
-        engine=engine, transport=transport,
+        engine=engine, transport=transport, downlink=downlink,
+        group_size=group_size,
     )
-    server = FedServer(model, cfg, nodes, test, batch_size=batch_size, seed=seed)
+    server = FedServer(model, cfg, nodes, test, batch_size=batch_size,
+                       seed=seed, mesh=mesh)
     server.step()  # warm the jit cache before timing
     t0 = time.time()
     hist = server.run(rounds, target_acc=target, eval_every=eval_every)

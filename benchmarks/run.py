@@ -265,21 +265,25 @@ def engine_ab(full: bool = False, tiny: bool = False) -> None:
 
 
 def transport_sweep(full: bool = False, tiny: bool = False) -> None:
-    """Quantized delta transport A/B: dtype x K sweep over the flat engine.
+    """Bidirectional wire A/B: (uplink, downlink) x K over the flat engine.
 
-    For each wire format (f32 / bf16 / int8) and K in {8, 32, 64, 128},
-    times a full federated round through `FLConfig(transport=...)` and
-    reports the uplink bytes the wire moves (`transport.wire_bytes` —
-    values plus int8's per-chunk f32 scales), writing the sweep to
+    For each uplink wire format (f32 / bf16 / int8 / int4) and K in
+    {8, 32, 64, 128}, times a full federated round through
+    `FLConfig(transport=...)` with the reference f32 downlink and reports
+    BOTH directions of the wire (`transport.round_bytes`: bytes_up is the
+    delta uplink incl. scale side data, bytes_down the model broadcast);
+    a second sweep holds the uplink at int4 and walks the downlink
+    formats (f32 / bf16 / int8) at the first K. Everything lands in
     BENCH_transport.json for the CI bench-smoke artifact.
 
     Unless `tiny`, also pins convergence parity on the non-IID synthetic
-    task (5 IID + 5 one-class nodes): rounds-to-target under the int8 wire
-    must stay within 10% of the f32 wire (the acceptance bound; quant
-    noise on this task is well inside round-count noise).
+    task (5 IID + 5 one-class nodes): rounds-to-target under the int8 and
+    int4 uplinks AND under the fully-compressed int4+int8-downlink pair
+    must stay within 10% of the f32 wire (the acceptance bound; the same
+    matrix is pinned as a TEST in tests/test_golden_convergence.py).
 
     On CPU the kernels run in interpret mode, so us_per_round measures the
-    correctness path; bytes_per_round is exact either way."""
+    correctness path; bytes are exact either way."""
     import json
 
     import jax
@@ -300,55 +304,96 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
         x, y = batch
         return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
 
-    records = []
-    for K in ks:
-        X = jnp.asarray(rng.normal(size=(K, tau, B, d)).astype(np.float32))
-        Y = jnp.asarray(rng.normal(size=(K, tau, B, 1)).astype(np.float32))
+    def time_round(K, data, tr, dl):
+        cfg = fl_mod.FLConfig(
+            num_clients=K,
+            clients_per_round=K,
+            local_steps=tau,
+            method="fedadp",
+            engine="flat",
+            transport=tr,
+            downlink=dl,
+            base_lr=0.05,
+        )
+        rf = jax.jit(fl_mod.make_round_fn(loss_fn, cfg))
+        state = AngleState.init(K)
+        prev = fl_mod.init_prev_delta(params)
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.ones((K,), jnp.float32)
-        wb = {}
-        for tr in transport_mod.TRANSPORTS:
-            cfg = fl_mod.FLConfig(
-                num_clients=K,
-                clients_per_round=K,
-                local_steps=tau,
-                method="fedadp",
-                engine="flat",
-                transport=tr,
-                base_lr=0.05,
-            )
-            rf = jax.jit(fl_mod.make_round_fn(loss_fn, cfg))
-            state = AngleState.init(K)
-            prev = fl_mod.init_prev_delta(params)
-            args = (params, state, prev, (X, Y), sel, sizes, jnp.int32(0))
-            jax.block_until_ready(rf(*args))  # compile
-            t0 = time.time()
-            reps = 5
-            for _ in range(reps):
-                jax.block_until_ready(rf(*args))
-            us = (time.time() - t0) / reps * 1e6
-            wb[tr] = transport_mod.wire_bytes(K, n_params, tr)
-            emit(f"transport/K={K}/{tr}/round", us, f"bytes={wb[tr]}")
-            records.append(
-                {
-                    "K": K,
-                    "d": d,
-                    "transport": tr,
-                    "us_per_round": us,
-                    "bytes_per_round": wb[tr],
-                }
-            )
+        args = (params, state, prev, data, sel, sizes, jnp.int32(0))
+        jax.block_until_ready(rf(*args))  # compile
+        t0 = time.time()
+        reps = 5
+        for _ in range(reps):
+            jax.block_until_ready(rf(*args))
+        return (time.time() - t0) / reps * 1e6
+
+    records = []
+
+    def record(K, data, tr, dl):
+        us = time_round(K, data, tr, dl)
+        rb = transport_mod.round_bytes(K, n_params, tr, dl)
+        emit(
+            f"transport/K={K}/{tr}/dl={dl}/round",
+            us,
+            f"up={rb['up']} down={rb['down']}",
+        )
+        records.append(
+            {
+                "K": K,
+                "d": d,
+                "transport": tr,
+                "downlink": dl,
+                "us_per_round": us,
+                "bytes_up": rb["up"],
+                "bytes_down": rb["down"],
+                "bytes_per_round": rb["total"],
+            }
+        )
+        return rb
+
+    for K in ks:
+        data = (
+            jnp.asarray(rng.normal(size=(K, tau, B, d)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(K, tau, B, 1)).astype(np.float32)),
+        )
+        wb = {tr: record(K, data, tr, "f32")["up"] for tr in transport_mod.TRANSPORTS}
         emit(
             f"transport/K={K}/int8_bytes_over_f32",
             0.0,
             f"{wb['int8'] / wb['f32']:.4f}",
         )
+        # acceptance: the int4 uplink moves ~0.125x the f32 bytes
+        emit(
+            f"transport/K={K}/int4_bytes_over_f32",
+            0.0,
+            f"{wb['int4'] / wb['f32']:.4f}",
+        )
+        if K == ks[0]:
+            # downlink sweep at the smallest K: uplink held at int4, the
+            # broadcast walked over every downlink format
+            down = {
+                dl: record(K, data, "int4", dl)["down"]
+                for dl in transport_mod.DOWNLINKS
+                if dl != "f32"
+            }
+            down["f32"] = transport_mod.round_bytes(K, n_params, "int4")["down"]
+            emit(
+                f"transport/K={K}/int8_down_over_f32_down",
+                0.0,
+                f"{down['int8'] / down['f32']:.4f}",
+            )
 
     convergence = None
     if not tiny:
         rounds = 120 if full else 60
         per = {}
-        for tr in ("f32", "int8"):
+        for tr, dl in (
+            ("f32", "f32"),
+            ("int8", "f32"),
+            ("int4", "f32"),
+            ("int4", "int8"),
+        ):
             hist, spr = run_fl(
                 "fedadp",
                 node_spec(5, 5, 1),
@@ -356,28 +401,31 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
                 target=0.85,
                 engine="flat",
                 transport=tr,
+                downlink=dl,
             )
-            per[tr] = hist.rounds_to_target
+            name = tr if dl == "f32" else f"{tr}+dl_{dl}"
+            per[name] = hist.rounds_to_target
             emit(
-                f"transport/convergence/{tr}/rounds_to_85",
+                f"transport/convergence/{name}/rounds_to_85",
                 spr * 1e6,
-                per[tr] or f">{rounds}",
+                per[name] or f">{rounds}",
             )
         # a wire that never reached the target is a parity FAILURE, not a
         # skipped measurement — record it as such so the artifact can't be
         # mistaken for a --tiny run (where convergence stays null).
-        ratio = (per["int8"] / per["f32"]
-                 if per["f32"] and per["int8"] else None)
-        emit(
-            "transport/convergence/int8_over_f32",
-            0.0,
-            f"{ratio:.3f}" if ratio else "no-convergence",
-        )
+        ratios = {}
+        for name in ("int8", "int4", "int4+dl_int8"):
+            r = per[name] / per["f32"] if per["f32"] and per[name] else None
+            ratios[name] = r
+            emit(
+                f"transport/convergence/{name}_over_f32",
+                0.0,
+                f"{r:.3f}" if r else "no-convergence",
+            )
         convergence = {
-            "rounds_f32": per["f32"],
-            "rounds_int8": per["int8"],
-            "ratio": ratio,
-            "within_10pct": ratio is not None and ratio <= 1.1,
+            "rounds": per,
+            "ratios": ratios,
+            "within_10pct": all(r is not None and r <= 1.1 for r in ratios.values()),
         }
 
     payload = {
@@ -386,6 +434,7 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
         "n_params": n_params,
         "tiny": tiny,
         "transports": list(transport_mod.TRANSPORTS),
+        "downlinks": list(transport_mod.DOWNLINKS),
         "records": records,
         "convergence": convergence,
     }

@@ -1,0 +1,75 @@
+"""Regenerate tests/golden/convergence.json — the pinned Table-I claim.
+
+Runs the fixed-seed 5 IID + 5 one-class synthetic task for fedadp vs
+fedavg across EVERY (uplink, downlink) wire pair (including int4 and the
+quantized downlinks) and records rounds-to-85%. The committed JSON is the
+golden the regression test (tests/test_golden_convergence.py) checks its
+claims and re-runs against; regenerate ONLY when an intentional algorithm
+change shifts convergence, and eyeball the diff — fedadp must stay <=
+fedavg and every wire within 10% of the f32/f32 reference.
+
+Usage:  PYTHONPATH=src python scripts/gen_golden_convergence.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import node_spec, run_fl  # noqa: E402
+from repro import transport  # noqa: E402
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "..", "tests",
+                           "golden", "convergence.json")
+
+# The fixed-seed task (matches benchmarks/run.py transport_sweep): every
+# field here is an INPUT to the runs; the test replays them verbatim.
+TASK = {
+    "spec": "5iid+5non1",
+    "target": 0.85,
+    "max_rounds": 60,
+    "seed": 0,
+    "engine": "flat",
+    "group_size": 512,
+    "eval_every": 2,
+}
+
+
+def run_matrix():
+    entries = {}
+    spec = node_spec(5, 5, 1)
+    for method in ("fedavg", "fedadp"):
+        for uplink in transport.TRANSPORTS:
+            for downlink in transport.DOWNLINKS:
+                hist, _ = run_fl(
+                    method, spec, rounds=TASK["max_rounds"],
+                    target=TASK["target"], engine=TASK["engine"],
+                    transport=uplink, downlink=downlink,
+                    group_size=TASK["group_size"], seed=TASK["seed"],
+                    eval_every=TASK["eval_every"],
+                )
+                key = f"{method}/{uplink}/{downlink}"
+                entries[key] = hist.rounds_to_target
+                print(f"{key}: {hist.rounds_to_target}", flush=True)
+    return entries
+
+
+def main():
+    import jax
+
+    entries = run_matrix()
+    payload = {
+        "task": TASK,
+        "metric": "rounds_to_target_accuracy",
+        "generated_with_jax": jax.__version__,
+        "entries": entries,
+    }
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(GOLDEN_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

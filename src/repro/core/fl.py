@@ -87,13 +87,39 @@ class FLConfig:
     #            stay one HBM pass over ~4x fewer bytes. The tree engine
     #            NEVER reads quantized buffers: it dequantizes back to the
     #            stacked tree and runs the per-leaf reference reductions.
-    transport: str = "f32"  # f32 | bf16 | int8
+    #   "int4" — two params per byte (packed nibble pairs) + one f32 scale
+    #            per (client, `group_size` elements); the flat engines run
+    #            the grouped-scale fused kernels (round_stats_q4 /
+    #            weighted_agg_q4) — one HBM pass over ~8x fewer bytes.
+    transport: str = "f32"  # f32 | bf16 | int8 | int4
+    # int4 scale-group width: one f32 dequant scale per `group_size`
+    # consecutive elements of a client's flat delta row. Must be even and
+    # divide kernels' CHUNK = ROWS*LANE = 16384 (so a packed byte never
+    # straddles a group and kernel tiles cover whole groups); smaller
+    # groups track local magnitude better at 4/group_size bytes/param of
+    # side data. Ignored by the other transports (int8 stays per-chunk).
+    group_size: int = transport_mod.GROUP_SIZE
+    # Server->client broadcast (downlink) wire format
+    # (repro.transport.downlink): "f32" is the reference broadcast (the
+    # round is then byte-identical upstream of this option); "bf16"/"int8"
+    # compress the global model once per round and EVERY engine trains its
+    # clients from the same dequantized reconstruction, so engine parity
+    # is preserved by construction. The server always applies the
+    # aggregated delta to its own uncompressed master params.
+    downlink: str = "f32"  # f32 | bf16 | int8
     # Carry the per-client quantization residual across rounds (EF-SGD) so
     # the compressed angle statistics stay unbiased over time. Requires
     # transport != "f32" and parallel mode; round_fn then takes a trailing
     # ef_state (num_clients, N) f32 array and returns its update as a 5th
     # output (see transport.init_error_feedback).
     error_feedback: bool = False
+    # Server-side EF mirror for the downlink: carry the broadcast residual
+    # params - dequant(quant(params)) across rounds so the model the
+    # clients see is unbiased over time. Requires downlink != "f32";
+    # round_fn then takes a trailing dl_state (N,) f32 vector
+    # (transport.downlink.init_downlink_error_feedback) and returns its
+    # update as the last output.
+    downlink_error_feedback: bool = False
     # Pallas interpret mode for engine="flat": None = auto (interpret
     # everywhere except a real TPU backend), or force True/False.
     interpret: Optional[bool] = None
@@ -200,8 +226,18 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
 
     With `fl.error_feedback` the round takes a trailing
     `ef_state` (num_clients, N) f32 residual array
-    (`transport.init_error_feedback`) and returns
-    (params, angle_state, new_prev_delta, metrics, new_ef_state).
+    (`transport.init_error_feedback`) and appends `new_ef_state` to the
+    outputs; with `fl.downlink_error_feedback` it takes a trailing
+    `dl_state` (N,) f32 broadcast-residual vector
+    (`transport.downlink.init_downlink_error_feedback`) and appends
+    `new_dl_state` LAST. Output order is always
+    (params, angle_state, new_prev_delta, metrics[, new_ef][, new_dl]).
+
+    `fl.downlink` != "f32" compresses the broadcast global model before
+    the clients' local updates (every engine trains from the identical
+    dequantized reconstruction; the aggregated delta is applied to the
+    server's uncompressed master params), and `fl.transport` the client
+    uplink ("int4" adds `fl.group_size`-wide grouped scales).
 
     When `angle_pred` is None, `fl.angle_filter` selects a built-in
     predicate ("dense_only" -> `moe_dense_only_pred`); an explicit
@@ -217,10 +253,21 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
         raise ValueError(
             f"unknown transport {fl.transport!r} (expected one of "
             f"{transport_mod.TRANSPORTS})")
+    if fl.downlink not in transport_mod.DOWNLINKS:
+        raise ValueError(
+            f"unknown downlink {fl.downlink!r} (expected one of "
+            f"{transport_mod.DOWNLINKS})")
+    if fl.transport == "int4":
+        transport_mod.validate_group_size(fl.group_size)
     if fl.error_feedback and fl.transport == "f32":
         raise ValueError(
             "error_feedback carries the quantization residual; transport="
-            "'f32' has none (set transport='bf16' or 'int8')")
+            "'f32' has none (set transport='bf16', 'int8', or 'int4')")
+    if fl.downlink_error_feedback and fl.downlink == "f32":
+        raise ValueError(
+            "downlink_error_feedback carries the broadcast quantization "
+            "residual; downlink='f32' has none (set downlink='bf16' or "
+            "'int8')")
     if fl.engine == "flat_sharded" and mesh is None:
         raise ValueError(
             "engine='flat_sharded' shards the (K, N) delta buffer over "
@@ -239,6 +286,10 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
                 "transport compresses the stacked parallel uplink buffer; "
                 "sequential mode streams one client at a time (use "
                 "mode='parallel' for quantized transport)")
+        if fl.downlink != "f32":
+            raise ValueError(
+                "quantized downlink is threaded through the parallel round "
+                "engines; use mode='parallel' for downlink != 'f32'")
         return _make_sequential_round(loss_fn, fl, angle_pred, grad_constraint)
     raise ValueError(fl.mode)
 
@@ -268,17 +319,44 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
     if fl.engine == "flat_sharded":
         round_ops = fl_shard_map.make_round_ops(
             mesh, alpha=fl.alpha, method=fl.method,
-            interpret=_resolve_interpret(fl), transport=fl.transport)
+            interpret=_resolve_interpret(fl), transport=fl.transport,
+            group_size=fl.group_size)
         row_sharding = fl_shard_map.flat_client_sharding(mesh)
         csize = fl_shard_map.client_axis_size(mesh)
 
     def round_fn(params, angle_state: AngleState, prev_delta, batches,
-                 sel_idx, data_sizes, round_idx, ef_state=None):
+                 sel_idx, data_sizes, round_idx, ef_state=None,
+                 dl_state=None):
         if fl.error_feedback and ef_state is None:
             raise ValueError(
                 "fl.error_feedback=True: pass ef_state (see "
                 "transport.init_error_feedback) as the round's 8th argument")
+        if fl.downlink_error_feedback and dl_state is None:
+            raise ValueError(
+                "fl.downlink_error_feedback=True: pass dl_state (see "
+                "transport.downlink.init_downlink_error_feedback) as the "
+                "round's 9th argument")
         lr = _lr_at(fl, round_idx)
+
+        # ---- server -> client downlink: compress the broadcast model ----
+        # The server keeps `params` as its uncompressed master copy (the
+        # aggregated delta is applied to it below); every client trains
+        # from the SAME dequantized reconstruction, so the three engines
+        # cannot fork — the branch is upstream of all of them.
+        params_srv = params
+        new_dl = None
+        if fl.downlink != "f32":
+            pvec, punravel = treemath.tree_ravel(params)
+            if fl.downlink_error_feedback:
+                # EF-SGD mirror: replay the carried broadcast residual,
+                # then carry what this round's compression drops.
+                pvec = pvec + dl_state
+            qd = transport_mod.downlink.compress(pvec, fl.downlink)
+            recon = transport_mod.downlink.decompress(qd)
+            if fl.downlink_error_feedback:
+                new_dl = pvec - recon
+            params = punravel(recon)
+
         deltas, losses = jax.vmap(
             lambda b: local_update(loss_fn, params, b, lr, fl.prox_mu,
                                    grad_constraint)
@@ -296,7 +374,8 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
                 # EF-SGD: replay the carried residual into this round's
                 # signal, then carry what quantization drops this round.
                 flat0 = flat0 + ef_state[sel_idx]
-            q = transport_mod.quantize(flat0, fl.transport)
+            q = transport_mod.quantize(flat0, fl.transport,
+                                       group_size=fl.group_size)
             if fl.error_feedback:
                 new_ef = ef_state.at[sel_idx].set(
                     flat0 - transport_mod.dequantize(q))
@@ -325,14 +404,18 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             if fl.transport == "f32":
                 flat, unravel = treemath.tree_ravel_stacked(deltas)
                 values, scales = flat, None
+                n_logical = flat.shape[1]
             else:
                 values, scales, unravel = q.values, q.scales, unravel0
+                # int4 packs two params per byte: the wire buffer width is
+                # NOT the logical width the mask/g vectors live in.
+                n_logical = flat0.shape[1]
             k = values.shape[0]
             kp = -(-k // csize) * csize  # pad the client axis to the mesh
             values = jax.lax.with_sharding_constraint(
                 _pad_rows(values, kp), row_sharding)
             mvec = (maskv if maskv is not None
-                    else jnp.ones((values.shape[1],), jnp.float32))
+                    else jnp.ones((n_logical,), jnp.float32))
             wire = (values,) if scales is None else (
                 values, jax.lax.with_sharding_constraint(
                     _pad_rows(scales, kp, 1.0), row_sharding))
@@ -366,6 +449,10 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
                     return weighted_agg_mod.weighted_agg(
                         wvec, wire_x, interpret=interpret,
                         out_dtype=jnp.float32)
+                if fl.transport == "int4":
+                    return weighted_agg_mod.weighted_agg_q4(
+                        wvec, wire_x, wire_s, n=flat0.shape[1],
+                        group_size=fl.group_size, interpret=interpret)
                 return weighted_agg_mod.weighted_agg_q(
                     wvec, wire_x, wire_s, interpret=interpret)
 
@@ -373,6 +460,10 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             if wire_s is None:
                 dots, sqs, sqg = round_stats_mod.round_stats(
                     wire_x, g_flat, maskv, interpret=interpret)
+            elif fl.transport == "int4":
+                dots, sqs, sqg = round_stats_mod.round_stats_q4(
+                    wire_x, wire_s, g_flat, maskv,
+                    group_size=fl.group_size, interpret=interpret)
             else:
                 dots, sqs, sqg = round_stats_mod.round_stats_q(
                     wire_x, wire_s, g_flat, maskv, interpret=interpret)
@@ -417,7 +508,9 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
                     lambda d, p: d.astype(p.dtype),
                     treemath.tree_weighted_sum(deltas, w, jnp.float32),
                     params)
-        new_params = treemath.tree_add(params, delta)
+        # the delta lands on the server's uncompressed master params — the
+        # downlink reconstruction is what the CLIENTS trained from.
+        new_params = treemath.tree_add(params_srv, delta)
 
         # Fig.7 divergence: (1/K) sum_i ||dF - dF_i|| with dF ~ -delta/lr
         div = jnp.mean(jnp.sqrt(jnp.maximum(sqs - 2 * dots + sqg, 0.0))) / lr
@@ -427,9 +520,12 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             "cos": jnp.cos(theta),
             "expected_contribution": weighting.expected_contribution(w, jnp.cos(theta)),
         }
+        outs = (new_params, new_state, g_avg, metrics)
         if fl.error_feedback:
-            return new_params, new_state, g_avg, metrics, new_ef
-        return new_params, new_state, g_avg, metrics
+            outs = outs + (new_ef,)
+        if fl.downlink_error_feedback:
+            outs = outs + (new_dl,)
+        return outs
 
     return round_fn
 

@@ -97,31 +97,44 @@ def _shard_slots(values, caxis):
     return jax.lax.axis_index(caxis) * k_loc + jnp.arange(k_loc)
 
 
-def _shard_agg(w_loc, values, scales, interpret):
+def _shard_agg(w_loc, values, scales, interpret, *, transport, n,
+               group_size):
     """Per-shard weighted aggregation over the local rows, f32 out.
 
     scales is None for f32/bf16 wire buffers (the kernels' in-VMEM
     astype(f32) IS the bf16 dequant); int8 routes through the fused
-    in-register dequant kernel with the per-(client, chunk) scales.
+    in-register dequant kernel with the per-(client, chunk) scales, int4
+    through the grouped-scale packed-nibble kernel (`n` is the logical
+    width the packed buffer unpacks to).
     """
     if scales is None:
         return weighted_agg_mod.weighted_agg(
             w_loc, values, interpret=interpret, out_dtype=jnp.float32)
+    if transport == "int4":
+        return weighted_agg_mod.weighted_agg_q4(
+            w_loc, values, scales, n=n, group_size=group_size,
+            interpret=interpret)
     return weighted_agg_mod.weighted_agg_q(
         w_loc, values, scales, interpret=interpret)
 
 
-def _shard_stats(values, scales, g_flat, mask, interpret):
+def _shard_stats(values, scales, g_flat, mask, interpret, *, transport,
+                 group_size):
     """Per-shard fused angle statistics over the local rows."""
     if scales is None:
         return round_stats_mod.round_stats(
             values, g_flat, mask, interpret=interpret)
+    if transport == "int4":
+        return round_stats_mod.round_stats_q4(
+            values, scales, g_flat, mask, group_size=group_size,
+            interpret=interpret)
     return round_stats_mod.round_stats_q(
         values, scales, g_flat, mask, interpret=interpret)
 
 
 def make_round_ops(mesh: Mesh, *, alpha: float, method: str = "fedadp",
-                   interpret: bool = True, transport: str = "f32"):
+                   interpret: bool = True, transport: str = "f32",
+                   group_size: int = 0):
     """The whole aggregation round as ONE shard_map call.
 
     PR 2's `make_flat_ops` exposed stats and aggregate as two separate
@@ -138,11 +151,15 @@ def make_round_ops(mesh: Mesh, *, alpha: float, method: str = "fedadp",
     "f32"/"bf16" stream it through the plain kernels (bf16 dequant is the
     kernels' in-VMEM astype); "int8" adds a row-sharded
     (K, num_chunks(N)) f32 scales operand and routes through the fused
-    in-register dequant kernels — the per-shard partial dots/sqnorms and
-    aggregates are psum'd exactly as in the f32 path, so scales never
-    cross shards. mask is a REQUIRED (N,) f32 vector — pass ones for
-    unfiltered stats (multiplying by 1.0 is exact in f32, so the result
-    is bit-identical to the unmasked kernel).
+    in-register dequant kernels; "int4" row-shards the PACKED
+    (K, ceil(N/2)) byte buffer plus its (K, num_groups) grouped scales
+    (`group_size` required) through the packed-nibble kernels — in every
+    case the per-shard partial dots/sqnorms and aggregates are psum'd
+    exactly as in the f32 path, so scales never cross shards. mask is a
+    REQUIRED (N,) f32 vector in LOGICAL element space (pass ones for
+    unfiltered stats — multiplying by 1.0 is exact in f32, so the result
+    is bit-identical to the unmasked kernel); for int4 it doubles as the
+    carrier of the logical width N the packed rows unpack to.
 
     Returns round_op(values[, scales], psi, mask, smoothed_sel, count_sel,
     data_sizes) -> (g_flat, dots, sqs, sqg, delta_flat, theta, theta_sm,
@@ -152,14 +169,22 @@ def make_round_ops(mesh: Mesh, *, alpha: float, method: str = "fedadp",
     """
     caxis = _client_axis(mesh)
     row_spec = P(caxis)
+    if transport == "int4":
+        from repro import transport as transport_mod
+
+        group_size = group_size or transport_mod.GROUP_SIZE
+        transport_mod.validate_group_size(group_size)
 
     def _body(values, scales, psi, mask, smoothed_sel, count_sel,
               data_sizes):
         my = _shard_slots(values, caxis)
+        n = mask.shape[0]  # logical width (!= packed width for int4)
+        kw = dict(transport=transport, group_size=group_size)
         g_flat = jax.lax.psum(
-            _shard_agg(psi[my], values, scales, interpret), caxis)
+            _shard_agg(psi[my], values, scales, interpret, n=n, **kw),
+            caxis)
         d_loc, s_loc, sqg = _shard_stats(values, scales, g_flat, mask,
-                                         interpret)
+                                         interpret, **kw)
         k = psi.shape[0]
         dots = jax.lax.psum(
             jnp.zeros((k,), jnp.float32).at[my].set(d_loc), caxis)
@@ -171,14 +196,15 @@ def make_round_ops(mesh: Mesh, *, alpha: float, method: str = "fedadp",
         if method == "fedadp":
             w = weighting.fedadp_weights(theta_sm, data_sizes, alpha)
             delta_flat = jax.lax.psum(
-                _shard_agg(w[my], values, scales, interpret), caxis)
+                _shard_agg(w[my], values, scales, interpret, n=n, **kw),
+                caxis)
         else:  # w == psi: the stats' aggregate IS the round delta
             w = psi
             delta_flat = g_flat
         return g_flat, dots, sqs, sqg, delta_flat, theta, theta_sm, w
 
     outs = (P(),) * 8
-    if transport == "int8":
+    if transport in ("int8", "int4"):
         return _shard_map(_body, mesh,
                           in_specs=(row_spec, row_spec) + (P(),) * 5,
                           out_specs=outs)
@@ -189,7 +215,8 @@ def make_round_ops(mesh: Mesh, *, alpha: float, method: str = "fedadp",
 
 def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
                      method: str = "fedadp", engine: str = "tree",
-                     interpret: bool = True, transport: str = "f32"):
+                     interpret: bool = True, transport: str = "f32",
+                     group_size: int = 0):
     """Build an aggregation fn over K-stacked deltas.
 
     delta_pspecs: PartitionSpec tree for the STACKED deltas — leading axis
@@ -213,7 +240,8 @@ def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
     if engine == "flat":
         return _fedadp_aggregate_flat(mesh, delta_pspecs, alpha=alpha,
                                       method=method, interpret=interpret,
-                                      transport=transport)
+                                      transport=transport,
+                                      group_size=group_size)
     if engine != "tree":
         raise ValueError(f"unknown engine {engine!r}")
     if transport != "f32":
@@ -314,7 +342,7 @@ def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
 
 def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
                            method: str, interpret: bool,
-                           transport: str = "f32"):
+                           transport: str = "f32", group_size: int = 0):
     """The flat engine behind `fedadp_aggregate(engine="flat")`.
 
     Same collective schedule as the tree engine — (1) psi-weighted psum,
@@ -326,6 +354,8 @@ def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
     """
     from repro import transport as transport_mod
 
+    if transport == "int4" and not group_size:
+        group_size = transport_mod.GROUP_SIZE
     spec_leaves = jax.tree.leaves(delta_pspecs,
                                   is_leaf=lambda x: isinstance(x, P))
     for s in spec_leaves:
@@ -335,7 +365,8 @@ def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
                 f"contiguous row and requires client-only sharding; got {s} "
                 "(use engine='tree' for model-axis-sharded leaves)")
     round_op = make_round_ops(mesh, alpha=alpha, method=method,
-                              interpret=interpret, transport=transport)
+                              interpret=interpret, transport=transport,
+                              group_size=group_size)
     row_sharding = flat_client_sharding(mesh)
 
     def body(deltas, data_sizes, smoothed_prev, count_prev):
@@ -352,7 +383,9 @@ def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
         if transport == "f32":
             wire = (flat,)
         else:
-            q = transport_mod.quantize(flat, transport)
+            q = transport_mod.quantize(
+                flat, transport,
+                group_size=group_size or transport_mod.GROUP_SIZE)
             values = jax.lax.with_sharding_constraint(q.values, row_sharding)
             wire = (values,) if q.scales is None else (
                 values,

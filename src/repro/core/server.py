@@ -67,13 +67,19 @@ class FedServer:
                                  mesh=mesh))
         self.angle_state = AngleState.init(fl.num_clients)
         self.prev_delta = fl_mod.init_prev_delta(self.params)
-        # fl.transport compresses the client uplink; with error_feedback
-        # the per-client quantization residual is carried between rounds.
+        # fl.transport compresses the client uplink and fl.downlink the
+        # server broadcast; with the respective error_feedback flags the
+        # quantization residuals are carried between rounds (per-client
+        # rows for the uplink, one server-side vector for the downlink).
+        n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(self.params))
         self.ef_state = None
         if fl.error_feedback:
-            n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(self.params))
             self.ef_state = transport_mod.init_error_feedback(
                 fl.num_clients, n)
+        self.dl_state = None
+        if fl.downlink_error_feedback:
+            self.dl_state = (
+                transport_mod.downlink.init_downlink_error_feedback(n))
         self.round = 0
         self._iters = [
             _epoch_batcher(ds, batch_size, seed + 17 * i)
@@ -103,12 +109,20 @@ class FedServer:
         sizes = jnp.asarray([len(self.nodes[i].y) for i in sel], jnp.float32)
         args = (self.params, self.angle_state, self.prev_delta, batches,
                 jnp.asarray(sel, jnp.int32), sizes, jnp.int32(self.round))
+        # round_fn appends new_ef / new_dl to its outputs in that order
+        # when the matching EF state is threaded (see fl.make_round_fn).
+        kw = {}
         if self.ef_state is not None:
-            (self.params, self.angle_state, self.prev_delta, metrics,
-             self.ef_state) = self.round_fn(*args, self.ef_state)
-        else:
-            self.params, self.angle_state, self.prev_delta, metrics = (
-                self.round_fn(*args))
+            kw["ef_state"] = self.ef_state
+        if self.dl_state is not None:
+            kw["dl_state"] = self.dl_state
+        outs = self.round_fn(*args, **kw)
+        (self.params, self.angle_state, self.prev_delta, metrics), rest = (
+            outs[:4], list(outs[4:]))
+        if self.ef_state is not None:
+            self.ef_state = rest.pop(0)
+        if self.dl_state is not None:
+            self.dl_state = rest.pop(0)
         self.round += 1
         return jax.device_get(metrics)
 

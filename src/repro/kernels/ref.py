@@ -54,6 +54,30 @@ def round_stats_q(values: jax.Array, scales: jax.Array, g: jax.Array,
     return round_stats(_dequant(values, scales), g, mask)
 
 
+def _dequant4(values: jax.Array, scales: jax.Array, n: int,
+              group_size: int) -> jax.Array:
+    """(K, n) f32 from the int4 packed wire (nibble pairs + grouped
+    scales) — delegates to the transport layer's own dequantize, like
+    `_dequant`, so the oracle tracks the ACTUAL wire semantics."""
+    from repro.transport.quantize import QuantizedDelta, dequantize
+
+    return dequantize(QuantizedDelta(values, scales, "int4", n, group_size))
+
+
+def weighted_agg_q4(w: jax.Array, values: jax.Array, scales: jax.Array, *,
+                    n: int, group_size: int):
+    """Dequantize-then-f32 oracle for the fused weighted_agg_q4 kernel."""
+    x = _dequant4(values, scales, n, group_size)
+    return jnp.sum(w.astype(jnp.float32)[:, None] * x, axis=0)
+
+
+def round_stats_q4(values: jax.Array, scales: jax.Array, g: jax.Array,
+                   mask: jax.Array | None = None, *, group_size: int):
+    """Dequantize-then-f32 oracle for the fused round_stats_q4 kernel."""
+    return round_stats(_dequant4(values, scales, g.shape[0], group_size),
+                       g, mask)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True):
     """Naive softmax attention oracle. q/k/v (BH, T, d)."""

@@ -28,6 +28,13 @@ chunk); dequantization happens in-register on the loaded tile, so the
 statistics stay one HBM pass over ~4x fewer bytes. g stays f32 — it is
 server-side state and never crosses the wire.
 
+`round_stats_q4` is the int4 packed path: each physical byte tile holds
+two logical chunks (low/high nibble planes of consecutive element
+pairs), scales are grouped (2*CHUNK/group_size groups per tile, expanded
+in-register), and the server-side g / mask vectors ride along as even/odd
+(ROWS, LANE) views so every nibble pairs with its own g element without
+ever interleaving the wire buffer — one HBM pass over ~8x fewer bytes.
+
 `interpret=True` runs the identical kernel body on CPU.
 """
 from __future__ import annotations
@@ -44,9 +51,11 @@ from repro.kernels.weighted_agg import (
     K_TILE,  # noqa: F401  (re-exported: callers size shards against it)
     LANE,
     ROWS,
+    _expand_group_scales,
     _k_chunks,
     _mask_tail_rows,
     _pad_lanes,
+    _unpack_nibbles,
 )
 
 
@@ -133,6 +142,142 @@ def round_stats(x: jax.Array, g: jax.Array, mask: jax.Array | None = None,
     kvec_spec = pl.BlockSpec((tile, 1), lambda kc, i: (kc, 0))
     dots, sqs, sqg = pl.pallas_call(
         functools.partial(kernel, k=K, tile=tile),
+        grid=(kp // tile, m // ROWS),
+        in_specs=in_specs,
+        out_specs=(kvec_spec, kvec_spec,
+                   pl.BlockSpec((1, 1), lambda kc, i: (0, 0))),
+        out_shape=(
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(*operands)
+    return dots[:K, 0], sqs[:K, 0], sqg[0, 0]
+
+
+def _stats_q4_kernel(x_ref, s_ref, ge_ref, go_ref, dots_ref, sqs_ref,
+                     sqg_ref, *, k, tile, gs2):
+    kc, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        dots_ref[...] = jnp.zeros_like(dots_ref)
+        sqs_ref[...] = jnp.zeros_like(sqs_ref)
+
+    @pl.when((kc == 0) & (i == 0))
+    def _init_g():
+        sqg_ref[0, 0] = 0.0
+
+    lo, hi = _unpack_nibbles(x_ref[...])
+    sexp = _expand_group_scales(s_ref[...], gs2)  # (KT, ROWS, LANE)
+    xlo = _mask_tail_rows(lo.astype(jnp.float32) * sexp, kc, k=k, tile=tile)
+    xhi = _mask_tail_rows(hi.astype(jnp.float32) * sexp, kc, k=k, tile=tile)
+    ge = ge_ref[...].astype(jnp.float32)  # (ROWS, LANE) — g[0::2]
+    go = go_ref[...].astype(jnp.float32)  # (ROWS, LANE) — g[1::2]
+    dots_ref[...] += (jnp.sum(xlo * ge[None], axis=(1, 2))
+                      + jnp.sum(xhi * go[None], axis=(1, 2)))[:, None]
+    sqs_ref[...] += (jnp.sum(xlo * xlo, axis=(1, 2))
+                     + jnp.sum(xhi * xhi, axis=(1, 2)))[:, None]
+
+    @pl.when(kc == 0)  # g repeats per client chunk; count it once
+    def _accum_g():
+        sqg_ref[0, 0] += jnp.sum(ge * ge) + jnp.sum(go * go)
+
+
+def _stats_q4_kernel_masked(x_ref, s_ref, ge_ref, go_ref, me_ref, mo_ref,
+                            dots_ref, sqs_ref, sqg_ref, *, k, tile, gs2):
+    kc, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        dots_ref[...] = jnp.zeros_like(dots_ref)
+        sqs_ref[...] = jnp.zeros_like(sqs_ref)
+
+    @pl.when((kc == 0) & (i == 0))
+    def _init_g():
+        sqg_ref[0, 0] = 0.0
+
+    lo, hi = _unpack_nibbles(x_ref[...])
+    sexp = _expand_group_scales(s_ref[...], gs2)
+    me = me_ref[...].astype(jnp.float32)  # (ROWS, LANE) in {0, 1}
+    mo = mo_ref[...].astype(jnp.float32)
+    xlo = _mask_tail_rows(lo.astype(jnp.float32) * sexp * me[None], kc,
+                          k=k, tile=tile)
+    xhi = _mask_tail_rows(hi.astype(jnp.float32) * sexp * mo[None], kc,
+                          k=k, tile=tile)
+    ge = ge_ref[...].astype(jnp.float32) * me
+    go = go_ref[...].astype(jnp.float32) * mo
+    dots_ref[...] += (jnp.sum(xlo * ge[None], axis=(1, 2))
+                      + jnp.sum(xhi * go[None], axis=(1, 2)))[:, None]
+    sqs_ref[...] += (jnp.sum(xlo * xlo, axis=(1, 2))
+                     + jnp.sum(xhi * xhi, axis=(1, 2)))[:, None]
+
+    @pl.when(kc == 0)
+    def _accum_g():
+        sqg_ref[0, 0] += jnp.sum(ge * ge) + jnp.sum(go * go)
+
+
+def _even_odd_views(vec: jax.Array, cols: int, m: int):
+    """Pad an (n,) server-side vector to 2*cols logical elements and split
+    into the (m, LANE) even/odd views the nibble planes pair with."""
+    pad = 2 * cols - vec.shape[0]
+    if pad:
+        vec = jnp.pad(vec, (0, pad))
+    return vec[0::2].reshape(m, LANE), vec[1::2].reshape(m, LANE)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "interpret"))
+def round_stats_q4(values: jax.Array, scales: jax.Array, g: jax.Array,
+                   mask: jax.Array | None = None, *, group_size: int,
+                   interpret: bool = True):
+    """`round_stats` over the int4 packed wire buffer, dequant in-register.
+
+    values: (K, ceil(n/2)) int8 packed (two int4 params per byte, low
+    nibble first); scales: (K, ceil(n/group_size)) f32 grouped dequant
+    multipliers (repro.transport int4 layout). g: (n,) f32 (server-side,
+    never quantized); mask likewise. Matches
+    round_stats(dequantize(int4 wire), g, mask) to f32 accumulation
+    order. group_size must be even and divide CHUNK = ROWS*LANE
+    (transport.validate_group_size): tiles cover whole groups and both
+    nibbles of a byte share one scale. Zero padding bytes dequantize to
+    exactly zero; the ragged tail client chunk is bounds-masked, so
+    out-of-range scale reads are select-zeroed with the rows they scale.
+    """
+    K, nb = values.shape
+    n = g.shape[0]
+    assert nb == -(-n // 2), (nb, n)
+    gs2 = group_size // 2
+    tile, kp = _k_chunks(K)
+    x = _pad_lanes(values, ROWS * LANE)
+    cols = x.shape[1]
+    m = cols // LANE
+    gp = cols // gs2
+    gt = (ROWS * LANE) // gs2
+    assert scales.shape[0] == K and scales.shape[1] <= gp, (scales.shape, gp)
+    sp = jnp.pad(scales.astype(jnp.float32),
+                 ((0, 0), (0, gp - scales.shape[1])), constant_values=1.0)
+    x3 = x.reshape(K, m, LANE)
+    ge2, go2 = _even_odd_views(g.astype(jnp.float32), cols, m)
+
+    tile_spec = pl.BlockSpec((ROWS, LANE), lambda kc, i: (i, 0))
+    in_specs = [
+        pl.BlockSpec((tile, ROWS, LANE), lambda kc, i: (kc, i, 0)),
+        pl.BlockSpec((tile, gt), lambda kc, i: (kc, i)),
+        tile_spec,
+        tile_spec,
+    ]
+    operands = [x3, sp, ge2, go2]
+    kernel = _stats_q4_kernel
+    if mask is not None:
+        me2, mo2 = _even_odd_views(mask.astype(jnp.float32), cols, m)
+        in_specs += [tile_spec, tile_spec]
+        operands += [me2, mo2]
+        kernel = _stats_q4_kernel_masked
+
+    kvec_spec = pl.BlockSpec((tile, 1), lambda kc, i: (kc, 0))
+    dots, sqs, sqg = pl.pallas_call(
+        functools.partial(kernel, k=K, tile=tile, gs2=gs2),
         grid=(kp // tile, m // ROWS),
         in_specs=in_specs,
         out_specs=(kvec_spec, kvec_spec,

@@ -20,6 +20,17 @@ values plus one f32 scale per (client, CHUNK)-tile and dequantizes
 in-register, so aggregation over a compressed uplink stays a single HBM
 pass that moves ~4x fewer bytes (see repro.transport).
 
+`weighted_agg_q4` extends that to the int4 packed wire: each physical
+(ROWS, LANE) byte tile holds TWO logical value chunks (low/high nibbles
+of consecutive element pairs), and the per-(client, group) scales are no
+longer 1:1 with tiles — a tile covers 2*CHUNK/group_size groups, expanded
+in-register by a static repeat. Both nibbles unpack in-register (shift /
+mask / sign-extend on the int32 upcast), so aggregation over the int4
+uplink is a single HBM pass over ~8x fewer bytes than f32. The kernel
+emits separate even/odd accumulators (one per nibble plane) that the
+wrapper interleaves back to logical order — an O(N) f32 shuffle on the
+OUTPUT, never a second pass over the wire buffer.
+
 Also provides `batched_dot`: u_k = <x_k, g> for all K clients in one pass
 (the per-client angle numerators), sharing the same tiling.
 """
@@ -62,6 +73,26 @@ def _pad_lanes(x: jax.Array, block: int) -> jax.Array:
         return x
     widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
     return jnp.pad(x, widths)
+
+
+def _unpack_nibbles(b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """int8 byte block -> (low, high) int32 nibble planes in [-8, 7].
+
+    The int32 upcast sign-extends the byte; `& 0xF` then isolates each
+    nibble and the `^ 8 - 8` trick re-extends the nibble's own sign bit.
+    Works identically on any block shape (elementwise)."""
+    bi = b.astype(jnp.int32)
+    lo = ((bi & 0xF) ^ 8) - 8
+    hi = (((bi >> 4) & 0xF) ^ 8) - 8
+    return lo, hi
+
+
+def _expand_group_scales(s: jax.Array, gs2: int) -> jax.Array:
+    """(KT, Gt) per-group scales -> (KT, ROWS, LANE) per-byte multipliers.
+
+    gs2 = group_size // 2 bytes per group; Gt * gs2 == ROWS * LANE, so the
+    repeat+reshape is a static in-register broadcast, no gather."""
+    return jnp.repeat(s, gs2, axis=1).reshape(s.shape[0], ROWS, LANE)
 
 
 def _mask_tail_rows(x: jax.Array, kc, *, k: int, tile: int) -> jax.Array:
@@ -170,6 +201,73 @@ def weighted_agg_q(w: jax.Array, values: jax.Array, scales: jax.Array, *,
         interpret=interpret,
     )(ws, x3)
     return y.reshape(-1)[:n]
+
+
+def _agg_q4_kernel(ws_ref, x_ref, ye_ref, yo_ref, *, k, tile, gs2):
+    kc = pl.program_id(1)
+
+    @pl.when(kc == 0)
+    def _init():
+        ye_ref[...] = jnp.zeros_like(ye_ref)
+        yo_ref[...] = jnp.zeros_like(yo_ref)
+
+    lo, hi = _unpack_nibbles(x_ref[...])
+    # (KT, Gt) weight x per-group dequant scales -> per-byte multipliers
+    sexp = _expand_group_scales(ws_ref[...], gs2)
+    xlo = _mask_tail_rows(lo.astype(jnp.float32) * sexp, kc, k=k, tile=tile)
+    xhi = _mask_tail_rows(hi.astype(jnp.float32) * sexp, kc, k=k, tile=tile)
+    ye_ref[...] += jnp.sum(xlo, axis=0)
+    yo_ref[...] += jnp.sum(xhi, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "group_size", "interpret"))
+def weighted_agg_q4(w: jax.Array, values: jax.Array, scales: jax.Array, *,
+                    n: int, group_size: int, interpret: bool = True):
+    """y[m] = sum_k w[k] * scale[k, m // group_size] * x4[k, m], f32 out.
+
+    values: (K, ceil(n/2)) int8 PACKED wire buffer (two int4 params per
+    byte, low nibble first); scales: (K, ceil(n/group_size)) f32 grouped
+    dequant multipliers (repro.transport int4 layout); `n` the logical
+    element count. The weight folds into the per-group scale on the host
+    (one (K_TILE, Gt) VMEM operand per step); nibbles unpack in-register
+    and accumulate into separate even/odd f32 planes, interleaved back to
+    logical order after the kernel. group_size must be even and divide
+    CHUNK = ROWS*LANE (transport.validate_group_size), so a tile covers
+    whole groups and a byte never straddles two scales. Zero padding
+    bytes dequantize to (0, 0) under any scale.
+    """
+    K, nb = values.shape
+    assert nb == -(-n // 2), (nb, n)
+    gs2 = group_size // 2
+    tile, kp = _k_chunks(K)
+    x = _pad_lanes(values, ROWS * LANE)
+    m = x.shape[1] // LANE
+    gp = x.shape[1] // gs2  # padded group columns (gs2 | ROWS*LANE | cols)
+    gt = (ROWS * LANE) // gs2  # groups per tile
+    assert scales.shape[0] == K and scales.shape[1] <= gp, (scales.shape, gp)
+    x3 = x.reshape(K, m, LANE)
+    # padding scales with 1.0 keeps padded zero bytes at exactly zero
+    sp = jnp.pad(scales.astype(jnp.float32),
+                 ((0, 0), (0, gp - scales.shape[1])), constant_values=1.0)
+    ws = _pad_axis0(w.reshape(K, 1).astype(jnp.float32) * sp, kp)
+
+    ye, yo = pl.pallas_call(
+        functools.partial(_agg_q4_kernel, k=K, tile=tile, gs2=gs2),
+        grid=(m // ROWS, kp // tile),
+        in_specs=[
+            pl.BlockSpec((tile, gt), lambda i, kc: (kc, i)),
+            pl.BlockSpec((tile, ROWS, LANE), lambda i, kc: (kc, i, 0)),
+        ],
+        out_specs=(pl.BlockSpec((ROWS, LANE), lambda i, kc: (i, 0)),
+                   pl.BlockSpec((ROWS, LANE), lambda i, kc: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((m, LANE), jnp.float32),
+                   jax.ShapeDtypeStruct((m, LANE), jnp.float32)),
+        interpret=interpret,
+    )(ws, x3)
+    # interleave the nibble planes back to logical order: y[2j] = ye[j],
+    # y[2j+1] = yo[j] — an O(N) shuffle of the f32 OUTPUT, not the wire.
+    y = jnp.stack([ye.reshape(-1), yo.reshape(-1)], axis=-1).reshape(-1)
+    return y[:n]
 
 
 def _bdot_kernel(x_ref, g_ref, out_ref, *, k, tile):

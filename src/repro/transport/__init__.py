@@ -1,24 +1,40 @@
-"""Delta transport: the wire format between client uplink and server.
+"""Delta transport: the bidirectional wire between clients and server.
 
-`quantize` compresses a client-stacked (K, N) f32 delta buffer into the
-configured wire dtype (f32 passthrough, bf16 cast, or int8 with per-chunk
-f32 scales aligned to the round kernels' tiling); the fused Pallas kernels
-(`kernels.round_stats.round_stats_q`, `kernels.weighted_agg.weighted_agg_q`)
-read the wire buffer directly and dequantize in-register, so the server's
-stats + aggregation stay a single HBM pass over ~4x fewer bytes.
+Uplink — `quantize` compresses a client-stacked (K, N) f32 delta buffer
+into the configured wire dtype (f32 passthrough, bf16 cast, int8 with
+per-chunk f32 scales aligned to the round kernels' tiling, or int4 packed
+two-params-per-byte with grouped scales); the fused Pallas kernels
+(`kernels.round_stats.round_stats_q{,4}`,
+`kernels.weighted_agg.weighted_agg_q{,4}`) read the wire buffer directly
+and dequantize in-register, so the server's stats + aggregation stay a
+single HBM pass over ~4x (int8) / ~8x (int4) fewer bytes.
 
-Contract (ROADMAP): transport="f32" is the reference wire format; the tree
-engine never reads quantized buffers directly — it dequantizes back to the
-stacked tree and runs the per-leaf reference reductions.
+Downlink — `downlink.compress` applies the same formats to the (N,)
+global model the server broadcasts back (f32 / bf16 / int8), with
+optional server-side error feedback; `round_bytes` reports both
+directions.
+
+Contract (ROADMAP): transport="f32" is the reference wire format and
+downlink="f32" the reference broadcast; the tree engine never reads
+quantized buffers directly — it dequantizes back to the stacked tree and
+runs the per-leaf reference reductions.
 """
+from repro.transport import downlink  # noqa: F401
 from repro.transport.quantize import (  # noqa: F401
     CHUNK,
+    DOWNLINKS,
+    GROUP_SIZE,
     TRANSPORTS,
     QuantizedDelta,
     dequantize,
     init_error_feedback,
     num_chunks,
+    num_groups,
+    pack_int4,
     quantize,
+    round_bytes,
     roundtrip,
+    unpack_int4,
+    validate_group_size,
     wire_bytes,
 )

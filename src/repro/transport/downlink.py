@@ -1,0 +1,57 @@
+"""Server->client broadcast (downlink) compression.
+
+The uplink layer (`transport.quantize`) compresses the K stacked client
+deltas; this module compresses the OTHER half of the round's traffic —
+the global model the server broadcasts back to the clients.
+`FLConfig(downlink="f32"|"bf16"|"int8")` selects the format; the round
+function compresses the raveled (N,) parameter vector once, and every
+client trains from the identical dequantized reconstruction, so the
+broadcast semantics cannot fork between engines (tree / flat /
+flat_sharded all consume the same reconstructed params).
+
+Contract (ROADMAP): downlink="f32" is the reference broadcast — the round
+is then bit-identical to a repo without this module. Quantized downlink
+reuses the uplink wire formats on a single-row (1, N) buffer (int8: one
+f32 scale per kernel-aligned CHUNK), so the roundtrip/error-bound
+properties pinned in tests/test_transport_properties.py cover both
+directions.
+
+Error feedback (`FLConfig(downlink_error_feedback=True)`) mirrors the
+uplink EF-SGD state server-side: the broadcast residual
+p - dequantize(quantize(p)) is carried across rounds and added back
+before the next compression, so the model the clients see is unbiased
+over time even though each individual broadcast is lossy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.transport import quantize as quantize_mod
+from repro.transport.quantize import DOWNLINKS, dequantize, quantize
+
+
+def compress(vec: jax.Array, downlink: str) -> quantize_mod.QuantizedDelta:
+    """Compress an (N,) f32 parameter vector into the downlink format."""
+    if downlink not in DOWNLINKS:
+        raise ValueError(f"unknown downlink {downlink!r} "
+                         f"(expected one of {DOWNLINKS})")
+    return quantize(vec[None, :], downlink)
+
+
+def decompress(q: quantize_mod.QuantizedDelta) -> jax.Array:
+    """(N,) f32 reconstruction — what every client trains from."""
+    return dequantize(q)[0]
+
+
+def broadcast_roundtrip(vec: jax.Array, downlink: str) -> jax.Array:
+    """decompress(compress(vec)) — the reconstruction the clients see."""
+    if downlink == "f32":
+        return vec.astype(jnp.float32)
+    return decompress(compress(vec, downlink))
+
+
+def init_downlink_error_feedback(n: int) -> jax.Array:
+    """(N,) f32 server-side broadcast residual carry (EF-SGD, one copy —
+    the broadcast is identical for every client)."""
+    return jnp.zeros((n,), jnp.float32)

@@ -1,4 +1,4 @@
-"""Client-uplink delta quantization with kernel-aligned per-chunk scales.
+"""Client-uplink delta quantization with kernel-aligned scales.
 
 Wire formats over the flat (K, N) client-delta buffer:
 
@@ -8,20 +8,38 @@ Wire formats over the flat (K, N) client-delta buffer:
 * ``int8`` — symmetric per-chunk quantization, 1 byte/param plus one f32
   scale per (client, chunk). q = round(x / s) in [-127, 127] with
   s = absmax(chunk) / 127.
+* ``int4`` — symmetric GROUPED quantization, two params per byte (packed
+  low/high nibble), plus one f32 scale per (client, group) with
+  ``group_size <= CHUNK`` elements per group. q = round(x / s) in [-7, 7]
+  with s = absmax(group) / 7. ~8x fewer value bytes than f32.
 
 The chunk is ``CHUNK = ROWS * LANE`` elements — exactly the (ROWS, LANE)
 tile each grid step of `kernels.round_stats` / `kernels.weighted_agg`
-streams per client, so the fused dequant path loads ONE scale per input
+streams per client, so int8's fused dequant path loads ONE scale per input
 tile: scales[k, c] pairs with values[k, c*CHUNK:(c+1)*CHUNK] and chunk c
 is grid step i == c of the lane dimension. Zero-padding the lane tail of
 a value buffer never needs scale padding: int8 zeros dequantize to zero
 under any scale.
+
+int4 breaks that 1:1 scale/tile pairing on purpose: a physical (ROWS,
+LANE) byte tile holds TWO logical chunks (2*CHUNK nibbles), and each tile
+covers ``2*CHUNK / group_size`` scale groups. The packing is pairwise —
+byte j of row k holds logical elements (2j, 2j+1) in its (low, high)
+nibbles — so the fused kernels (`round_stats_q4`, `weighted_agg_q4`)
+unpack both nibbles in-register and pair them with even/odd views of the
+server-side vectors; `group_size` must be even (a byte never straddles a
+group) and divide CHUNK (tiles cover whole groups). Nibble coding is
+offset-binary-free two's complement in [-7, 7]: 0x8 (== -8) is never
+produced, so a zero byte dequantizes to exactly (0, 0) under any scale.
 
 Error feedback (optional, `FLConfig(error_feedback=True)`): the residual
 x - dequantize(quantize(x)) is carried per population client and added to
 the next round's delta before quantization, so FedAdp's angle statistics
 see an unbiased compressed signal over time (EF-SGD; cf. the
 resource-constrained uplink motivation in PAPERS.md).
+
+`repro.transport.downlink` reuses these formats for the server->client
+broadcast; `round_bytes` reports both directions of the wire.
 """
 from __future__ import annotations
 
@@ -30,36 +48,77 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.weighted_agg import LANE, ROWS
+from repro.kernels.weighted_agg import LANE, ROWS, _unpack_nibbles
 
 # One f32 scale per CHUNK wire values per client — 4/CHUNK bytes of side
 # data per parameter (~0.02% at the default 16384-element chunk).
 CHUNK = ROWS * LANE
 
-TRANSPORTS = ("f32", "bf16", "int8")
+# Default int4 scale-group width (FLConfig(group_size=...)): 512 elements
+# -> one f32 scale per 256 wire bytes (~1.6% side data), 32 groups per
+# kernel tile. Any even divisor of CHUNK in [2, CHUNK] is accepted.
+GROUP_SIZE = 512
+
+TRANSPORTS = ("f32", "bf16", "int8", "int4")
+# Formats accepted for the server->client broadcast (see downlink.py).
+# int4's pairwise packing buys little on a single replicated vector next
+# to its extra group-scale traffic; the downlink stops at int8.
+DOWNLINKS = ("f32", "bf16", "int8")
+
+_DTYPE_FMT = {jnp.dtype(jnp.float32): "f32",
+              jnp.dtype(jnp.bfloat16): "bf16",
+              jnp.dtype(jnp.int8): "int8"}
 
 
 class QuantizedDelta(NamedTuple):
     """Wire-format view of a (K, N) client-delta buffer.
 
-    values: (K, N) in the wire dtype (f32 / bf16 / int8).
-    scales: (K, num_chunks(N)) f32 for int8, else None — per-(client,
-      chunk) dequant multipliers aligned to the kernels' lane tiling.
+    values: (K, N) in the wire dtype for f32/bf16/int8; for int4 the
+      PACKED (K, ceil(N/2)) int8 buffer (two nibbles per byte).
+    scales: f32 dequant multipliers — (K, num_chunks(N)) for int8,
+      (K, num_groups(N, group_size)) for int4, else None.
+    fmt: wire format name; "" infers from the values dtype (legacy int8
+      constructions in tests/oracles), which is ambiguous for int4 — the
+      int4 quantizer always sets it.
+    n: logical element count (int4 only; the packed buffer loses N's
+      parity). -1 when values are unpacked.
+    group_size: int4 scale-group width; 0 for the per-chunk formats.
     """
 
     values: jax.Array
     scales: Optional[jax.Array]
+    fmt: str = ""
+    n: int = -1
+    group_size: int = 0
 
     @property
     def transport(self) -> str:
-        return {jnp.dtype(jnp.float32): "f32",
-                jnp.dtype(jnp.bfloat16): "bf16",
-                jnp.dtype(jnp.int8): "int8"}[jnp.dtype(self.values.dtype)]
+        return self.fmt or _DTYPE_FMT[jnp.dtype(self.values.dtype)]
 
 
 def num_chunks(n: int) -> int:
     """Scale columns for an N-wide buffer (== kernel lane-tile grid steps)."""
     return max(1, -(-n // CHUNK))
+
+
+def num_groups(n: int, group_size: int = GROUP_SIZE) -> int:
+    """int4 scale columns for an N-wide buffer (one per group)."""
+    return max(1, -(-n // group_size))
+
+
+def validate_group_size(group_size: int) -> None:
+    """int4 group contract: even (a packed byte never straddles a group)
+    and a divisor of CHUNK (kernel tiles cover whole groups), in
+    [2, CHUNK]. Raises ValueError otherwise."""
+    if (
+        not isinstance(group_size, int)
+        or not 2 <= group_size <= CHUNK
+        or group_size % 2
+        or CHUNK % group_size
+    ):
+        raise ValueError(
+            f"int4 group_size must be an even divisor of CHUNK={CHUNK} in "
+            f"[2, {CHUNK}]; got {group_size!r}")
 
 
 def _pad_to_chunks(flat: jax.Array) -> jax.Array:
@@ -69,15 +128,7 @@ def _pad_to_chunks(flat: jax.Array) -> jax.Array:
     return flat
 
 
-def quantize(flat: jax.Array, transport: str) -> QuantizedDelta:
-    """Compress a (K, N) f32 delta buffer into the wire format."""
-    if transport not in TRANSPORTS:
-        raise ValueError(f"unknown transport {transport!r} "
-                         f"(expected one of {TRANSPORTS})")
-    if transport == "f32":
-        return QuantizedDelta(flat.astype(jnp.float32), None)
-    if transport == "bf16":
-        return QuantizedDelta(flat.astype(jnp.bfloat16), None)
+def _quantize_int8(flat: jax.Array) -> QuantizedDelta:
     k, n = flat.shape
     c = num_chunks(n)
     xp = _pad_to_chunks(flat.astype(jnp.float32)).reshape(k, c, CHUNK)
@@ -86,28 +137,102 @@ def quantize(flat: jax.Array, transport: str) -> QuantizedDelta:
     scales = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
     q = jnp.clip(jnp.round(xp / scales[:, :, None]), -127.0, 127.0)
     values = q.astype(jnp.int8).reshape(k, c * CHUNK)[:, :n]
-    return QuantizedDelta(values, scales)
+    return QuantizedDelta(values, scales, "int8")
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack an even-width (K, 2M) int array in [-7, 7] to (K, M) int8:
+    byte j = (q[2j] & 0xF) | (q[2j+1] << 4)."""
+    k, n2 = q.shape
+    assert n2 % 2 == 0, n2
+    qi = q.astype(jnp.int32)
+    lo, hi = qi[:, 0::2], qi[:, 1::2]
+    b = (lo & 0xF) | ((hi & 0xF) << 4)  # [0, 255]
+    return jnp.where(b > 127, b - 256, b).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """(K, M) int8 -> (K, 2M) int32 nibbles in [-8, 7], interleaved back
+    to logical order (low nibble first).
+
+    Shares the nibble decode with the fused kernels so the wire coding
+    cannot drift between the reference dequantizer and the in-register
+    path; the decode itself is pinned independently by the roundtrip
+    property tests (quantize is separate code)."""
+    lo, hi = _unpack_nibbles(packed)
+    k, m = packed.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(k, 2 * m)
+
+
+def _quantize_int4(flat: jax.Array, group_size: int) -> QuantizedDelta:
+    validate_group_size(group_size)
+    k, n = flat.shape
+    g = num_groups(n, group_size)
+    total = g * group_size
+    xp = jnp.pad(flat.astype(jnp.float32), ((0, 0), (0, total - n)))
+    xg = xp.reshape(k, g, group_size)
+    absmax = jnp.max(jnp.abs(xg), axis=2)
+    scales = jnp.where(absmax > 0.0, absmax / 7.0, 1.0)
+    q = jnp.clip(jnp.round(xg / scales[:, :, None]), -7.0, 7.0)
+    # group_size is even, so the even-width slice never splits a byte;
+    # keep the minimal even width covering n.
+    ne = n + (n % 2)
+    values = pack_int4(q.reshape(k, total)[:, :ne])
+    return QuantizedDelta(values, scales, "int4", n, group_size)
+
+
+def quantize(flat: jax.Array, transport: str, *,
+             group_size: int = GROUP_SIZE) -> QuantizedDelta:
+    """Compress a (K, N) f32 delta buffer into the wire format.
+
+    `group_size` applies to int4 only (grouped scales); int8 keeps one
+    scale per kernel-aligned CHUNK."""
+    if transport not in TRANSPORTS:
+        raise ValueError(f"unknown transport {transport!r} "
+                         f"(expected one of {TRANSPORTS})")
+    if transport == "f32":
+        return QuantizedDelta(flat.astype(jnp.float32), None, "f32")
+    if transport == "bf16":
+        return QuantizedDelta(flat.astype(jnp.bfloat16), None, "bf16")
+    if transport == "int4":
+        return _quantize_int4(flat, group_size)
+    return _quantize_int8(flat)
 
 
 def dequantize(q: QuantizedDelta) -> jax.Array:
     """(K, N) f32 reconstruction — the reference the fused kernels match."""
     if q.scales is None:
         return q.values.astype(jnp.float32)
+    if q.transport == "int4":
+        if q.n < 0:
+            raise ValueError(
+                "int4 QuantizedDelta needs its logical width (n); construct "
+                "it through transport.quantize")
+        k = q.values.shape[0]
+        g, gs = q.scales.shape[1], q.group_size
+        x = unpack_int4(q.values).astype(jnp.float32)
+        pad = g * gs - x.shape[1]
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad)))
+        x = (x.reshape(k, g, gs) * q.scales[:, :, None]).reshape(k, g * gs)
+        return x[:, :q.n]
     k, n = q.values.shape
     c = q.scales.shape[1]
     xp = _pad_to_chunks(q.values.astype(jnp.float32)).reshape(k, c, CHUNK)
     return (xp * q.scales[:, :, None]).reshape(k, c * CHUNK)[:, :n]
 
 
-def roundtrip(flat: jax.Array, transport: str) -> jax.Array:
+def roundtrip(flat: jax.Array, transport: str, *,
+              group_size: int = GROUP_SIZE) -> jax.Array:
     """dequantize(quantize(x)) — the tree engine's dequantize-then-reference
     view of the wire (it never reads quantized buffers directly)."""
     if transport == "f32":
         return flat.astype(jnp.float32)
-    return dequantize(quantize(flat, transport))
+    return dequantize(quantize(flat, transport, group_size=group_size))
 
 
-def wire_bytes(k: int, n: int, transport: str) -> int:
+def wire_bytes(k: int, n: int, transport: str, *,
+               group_size: int = GROUP_SIZE) -> int:
     """Uplink bytes for K clients x N params (values + scale side data)."""
     if transport == "f32":
         return k * n * 4
@@ -115,7 +240,26 @@ def wire_bytes(k: int, n: int, transport: str) -> int:
         return k * n * 2
     if transport == "int8":
         return k * n * 1 + k * num_chunks(n) * 4
+    if transport == "int4":
+        return k * -(-n // 2) + k * num_groups(n, group_size) * 4
     raise ValueError(f"unknown transport {transport!r}")
+
+
+def round_bytes(k: int, n: int, transport: str, downlink: str = "f32", *,
+                group_size: int = GROUP_SIZE) -> dict:
+    """Both directions of one round's wire traffic, in bytes.
+
+    up:    K client uplinks of the delta buffer in `transport`.
+    down:  K server->client broadcasts of the N-param global model in
+           `downlink` (unicast accounting — multicast fabrics pay less).
+    total: up + down.
+    """
+    if downlink not in DOWNLINKS:
+        raise ValueError(f"unknown downlink {downlink!r} "
+                         f"(expected one of {DOWNLINKS})")
+    up = wire_bytes(k, n, transport, group_size=group_size)
+    down = k * wire_bytes(1, n, downlink)
+    return {"up": up, "down": down, "total": up + down}
 
 
 def init_error_feedback(num_clients: int, n: int) -> jax.Array:

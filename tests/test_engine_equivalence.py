@@ -198,7 +198,9 @@ def test_flat_sharded_nondivisible_k_matches_tree_subprocess():
     """K % shards != 0 no longer raises: the client axis is zero-padded
     before sharding (padded rows carry zero deltas and zero data size, so
     they get exactly zero weight and zero stats). K=13 on an 8-way mesh is
-    pinned against the tree engine, for the f32 and int8 wires."""
+    pinned against the tree engine, for the f32, int8 and packed-int4
+    wires — the int4 leg under a quantized (int8) downlink, so sharded
+    parity is exercised with BOTH directions of the wire compressed."""
     prog = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -207,7 +209,7 @@ def test_flat_sharded_nondivisible_k_matches_tree_subprocess():
         from repro.core.weighting import AngleState
         K, d, tau, B = 13, 12, 2, 4
         rng = np.random.default_rng(0)
-        params = {"w": jnp.zeros((d, 1), jnp.float32),
+        params = {"w": jnp.full((d, 1), 0.05, jnp.float32),
                   "b": jnp.zeros((1,), jnp.float32)}
         X = jnp.asarray(rng.normal(size=(K, tau, B, d)).astype(np.float32))
         wt = rng.normal(size=(K, d, 1)).astype(np.float32)
@@ -218,12 +220,13 @@ def test_flat_sharded_nondivisible_k_matches_tree_subprocess():
         mesh = jax.make_mesh((8,), ("data",))
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.asarray(np.linspace(10.0, 40.0, K, dtype=np.float32))
-        for tr in ("f32", "int8"):
+        for tr, dl in (("f32", "f32"), ("int8", "f32"), ("int4", "int8")):
             outs = {}
             for engine in ("tree", "flat_sharded"):
                 cfg = fl.FLConfig(num_clients=K, clients_per_round=K,
                                   local_steps=tau, method="fedadp",
-                                  engine=engine, transport=tr, base_lr=0.05)
+                                  engine=engine, transport=tr, downlink=dl,
+                                  group_size=32, base_lr=0.05)
                 rf = jax.jit(fl.make_round_fn(loss_fn, cfg, mesh=mesh))
                 p, state = params, AngleState.init(K)
                 prev = fl.init_prev_delta(params)

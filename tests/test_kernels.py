@@ -139,6 +139,58 @@ def test_chunked_round_stats_masked_across_chunk_boundary(dtype):
     assert not np.allclose(np.asarray(got[1]), np.asarray(full[1]))
 
 
+# ---- int4 packed wire: fused unpack+grouped-dequant kernel parity ----
+# (transport-level parity and boundary sweeps live in test_transport.py;
+# these pin the KERNEL contract directly on hand-built wire buffers.)
+
+
+def _int4_wire(key, k, n, gs):
+    from repro import transport
+
+    x = jax.random.normal(key, (k, n), jnp.float32)
+    q = transport.quantize(x, "int4", group_size=gs)
+    return q.values, q.scales
+
+
+@pytest.mark.parametrize("k", CHUNK_KS)
+@pytest.mark.parametrize("gs", [32, 512, 16384])
+def test_round_stats_q4_kernel_chunk_and_group_boundaries(k, gs):
+    """Ragged client chunks x scale groups that subdivide a kernel tile
+    row (gs=32), straddle rows (gs=512), and match the whole chunk."""
+    n = 16385  # one byte-tile plus a ragged logical tail (odd N)
+    values, scales = _int4_wire(jax.random.key(0), k, n, gs)
+    g = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+    got = round_stats.round_stats_q4(values, scales, g, group_size=gs)
+    want = ref.round_stats_q4(values, scales, g, group_size=gs)
+    for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(ww), rtol=2e-3,
+                                   atol=1e-2, err_msg=name)
+
+
+@pytest.mark.parametrize("k", CHUNK_KS)
+@pytest.mark.parametrize("gs", [32, 512, 16384])
+def test_weighted_agg_q4_kernel_chunk_and_group_boundaries(k, gs):
+    n = 16385
+    values, scales = _int4_wire(jax.random.key(2), k, n, gs)
+    w = jax.random.uniform(jax.random.key(3), (k,), jnp.float32)
+    got = weighted_agg.weighted_agg_q4(w, values, scales, n=n, group_size=gs)
+    want = ref.weighted_agg_q4(w, values, scales, n=n, group_size=gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3,
+                               atol=1e-3)
+
+
+def test_q4_kernels_reject_packed_width_mismatch():
+    """A packed buffer whose width is not ceil(n/2) is a layout bug, not
+    a tolerable input — both kernels must refuse it."""
+    values, scales = _int4_wire(jax.random.key(4), 2, 100, 32)
+    g = jnp.ones((97,), jnp.float32)  # wrong logical width
+    with pytest.raises(AssertionError):
+        round_stats.round_stats_q4(values, scales, g, group_size=32)
+    with pytest.raises(AssertionError):
+        weighted_agg.weighted_agg_q4(jnp.ones((2,)), values, scales, n=97,
+                                     group_size=32)
+
+
 def test_round_stats_bf16_accumulates_in_f32():
     # 2^14 bf16 ones: naive bf16 accumulation saturates at 256
     n = 1 << 14
