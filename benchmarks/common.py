@@ -45,10 +45,20 @@ def run_fl(
     engine: str = "tree",
     transport: str = "f32",
     downlink: str = "f32",
+    downlink_delta: bool = False,
     group_size: int = 512,
     mesh=None,
+    scan: bool = False,
+    scan_block: int = 8,
 ):
-    """Returns (history, seconds_per_round)."""
+    """Returns (history, seconds_per_round).
+
+    `scan=True` drives the run through the scanned device-resident driver
+    (`FedServer.run_scanned`, `scan_block` rounds per dispatch) instead of
+    the stepwise per-round loop; both share the same compiled step, so
+    the trajectory is identical and only the dispatch granularity (and
+    wall clock) differs.
+    """
     train, test = get_task()
     nodes = synthetic.make_federated(train, spec, samples_per_node=samples,
                                      seed=seed + 1)
@@ -57,13 +67,24 @@ def run_fl(
         num_clients=n, clients_per_round=n, local_steps=samples // batch_size,
         method=method, alpha=alpha, base_lr=base_lr,
         engine=engine, transport=transport, downlink=downlink,
-        group_size=group_size,
+        downlink_delta=downlink_delta, group_size=group_size,
     )
     server = FedServer(model, cfg, nodes, test, batch_size=batch_size,
                        seed=seed, mesh=mesh)
-    server.step()  # warm the jit cache before timing
+    # warm the jit cache on the chosen dispatch path with throwaway
+    # rounds, then reset so the timed trajectory still starts at round 0
+    if scan:
+        server.run_scanned(min(rounds, scan_block), eval_every=eval_every,
+                           block=scan_block)
+    else:
+        server.step(eval_every=eval_every)
+    server.reset()
     t0 = time.time()
-    hist = server.run(rounds, target_acc=target, eval_every=eval_every)
+    if scan:
+        hist = server.run_scanned(rounds, target_acc=target,
+                                  eval_every=eval_every, block=scan_block)
+    else:
+        hist = server.run(rounds, target_acc=target, eval_every=eval_every)
     dt = time.time() - t0
     done = len(hist.loss) or 1
     return hist, dt / done

@@ -202,7 +202,6 @@ def engine_ab(full: bool = False, tiny: bool = False) -> None:
     import jax.numpy as jnp
 
     from repro.core import fl as fl_mod
-    from repro.core.weighting import AngleState
 
     ks = (4, 8) if tiny else (8, 32, 64, 128)
     d = 1 << 10 if tiny else (1 << 16 if full else 1 << 14)
@@ -238,9 +237,7 @@ def engine_ab(full: bool = False, tiny: bool = False) -> None:
                 base_lr=0.05,
             )
             rf = jax.jit(fl_mod.make_round_fn(loss_fn, cfg, mesh=mesh))
-            state = AngleState.init(K)
-            prev = fl_mod.init_prev_delta(params)
-            args = (params, state, prev, (X, Y), sel, sizes, jnp.int32(0))
+            args = (fl_mod.init_round_state(cfg, params), (X, Y), sel, sizes)
             jax.block_until_ready(rf(*args))  # compile
             t0 = time.time()
             reps = 5
@@ -291,7 +288,6 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
 
     from repro import transport as transport_mod
     from repro.core import fl as fl_mod
-    from repro.core.weighting import AngleState
 
     ks = (4, 8) if tiny else (8, 32, 64, 128)
     d = 1 << 10 if tiny else (1 << 16 if full else 1 << 14)
@@ -316,11 +312,9 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
             base_lr=0.05,
         )
         rf = jax.jit(fl_mod.make_round_fn(loss_fn, cfg))
-        state = AngleState.init(K)
-        prev = fl_mod.init_prev_delta(params)
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.ones((K,), jnp.float32)
-        args = (params, state, prev, data, sel, sizes, jnp.int32(0))
+        args = (fl_mod.init_round_state(cfg, params), data, sel, sizes)
         jax.block_until_ready(rf(*args))  # compile
         t0 = time.time()
         reps = 5
@@ -443,6 +437,96 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
     emit("transport/json", 0.0, "BENCH_transport.json")
 
 
+def driver_ab(full: bool = False, tiny: bool = False) -> None:
+    """Python-loop vs scanned round driver A/B across a K sweep.
+
+    Both paths run the SAME compiled device-resident step (selection +
+    batching + round + conditional eval from the device RNG); the
+    python-loop path dispatches it once per round and `device_get`s the
+    metrics each time (the pre-driver FedServer cadence), while the
+    scanned path folds all R rounds into one `lax.scan` dispatch
+    (`FedServer.run_scanned` with block=R). The gap is therefore pure
+    dispatch/sync overhead — exactly what the device-resident driver
+    exists to remove. Results land in BENCH_driver.json for the CI
+    bench-smoke artifact; acceptance is scanned <= python-loop at every K.
+    """
+    import json
+
+    from repro.core import fl as fl_mod
+    from repro.core.server import FedServer
+    from repro.data import synthetic
+
+    ks = (4, 8) if tiny else (8, 32, 64, 128)
+    samples, batch = (8, 4) if tiny else (100, 50)
+    reps, R = (3, 8) if tiny else (5, 8)
+    train, test = synthetic.make_image_task(
+        seed=0, num_train=512 if tiny else 4000, num_test=128 if tiny else 512
+    )
+    records, ratios = [], {}
+    for K in ks:
+        nodes = synthetic.make_federated(
+            train, [("iid", None)] * K, samples_per_node=samples, seed=1
+        )
+        cfg = fl_mod.FLConfig(
+            num_clients=K,
+            clients_per_round=K,
+            local_steps=samples // batch,
+            method="fedadp",
+            base_lr=0.05,
+        )
+        server = FedServer("mlr", cfg, nodes, test, batch_size=batch, seed=0)
+
+        def loop_path():
+            for _ in range(R):
+                server.step()
+
+        def scan_path():
+            server.run_scanned(R, eval_every=0, block=R)
+
+        server.step()  # compile the stepwise dispatch
+        scan_path()  # compile the scan block
+        # interleave the two paths' reps so slow machine-load drift hits
+        # both equally (back-to-back rep blocks skew the ratio)
+        loop_us, scan_us = _best_us_interleaved(loop_path, scan_path, reps)
+        loop_us, scan_us = loop_us / R, scan_us / R
+
+        emit(f"driver_ab/K={K}/python_loop/round", loop_us, f"R={R}")
+        emit(f"driver_ab/K={K}/scanned/round", scan_us, f"R={R}")
+        ratios[K] = scan_us / loop_us
+        emit(f"driver_ab/K={K}/scanned_over_loop", 0.0, f"{ratios[K]:.3f}")
+        records += [
+            {"K": K, "path": "python_loop", "us_per_round": loop_us},
+            {"K": K, "path": "scanned", "us_per_round": scan_us},
+        ]
+    payload = {
+        "bench": "driver_ab",
+        "tiny": tiny,
+        "rounds_per_dispatch": R,
+        "records": records,
+        "scanned_over_loop": {str(k): v for k, v in ratios.items()},
+        # the acceptance claim the artifact carries: the scanned driver is
+        # never slower than the per-round dispatch loop
+        "scanned_leq_loop_all_k": all(v <= 1.0 for v in ratios.values()),
+    }
+    with open("BENCH_driver.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("driver_ab/json", 0.0, "BENCH_driver.json")
+
+
+def _best_us_interleaved(fn_a, fn_b, reps: int):
+    """Best-of-`reps` wall time of each fn in microseconds, reps
+    interleaved a/b/a/b so load drift cannot bias the comparison."""
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        fn_a()
+        best_a = min(best_a, time.time() - t0)
+        t0 = time.time()
+        fn_b()
+        best_b = min(best_b, time.time() - t0)
+    return best_a * 1e6, best_b * 1e6
+
+
 def roofline_table(full: bool = False) -> None:
     """Post-process results/dryrun.jsonl into roofline terms (if present)."""
     import json
@@ -476,6 +560,7 @@ BENCHES = {
     "kernels": kernel_micro,
     "engine": engine_ab,
     "transport": transport_sweep,
+    "driver": driver_ab,
     "roofline": roofline_table,
 }
 
@@ -490,7 +575,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in names:
         kwargs = {"full": args.full}
-        if name in ("engine", "transport"):
+        if name in ("engine", "transport", "driver"):
             kwargs["tiny"] = args.tiny
         BENCHES[name](**kwargs)
 

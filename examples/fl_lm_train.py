@@ -21,7 +21,6 @@ import numpy as np
 from repro.checkpoint import io as ckpt
 from repro.configs import registry
 from repro.core import fl
-from repro.core.weighting import AngleState
 from repro.data import synthetic
 from repro.models import transformer
 from repro.models.config import ModelConfig
@@ -61,8 +60,7 @@ def main() -> None:
                         base_lr=args.lr, lr_decay=0.999)
     round_fn = jax.jit(fl.make_round_fn(
         lambda p, b: transformer.loss_fn(p, cfg, b), flcfg))
-    state = AngleState.init(args.clients)
-    prev = fl.init_prev_delta(params)
+    state = fl.init_round_state(flcfg, params)
     sel = jnp.arange(args.clients, dtype=jnp.int32)
     sizes = jnp.ones((args.clients,))
 
@@ -72,19 +70,16 @@ def main() -> None:
             seq=args.seq, vocab=cfg.vocab_size,
         ).reshape(args.clients, args.tau, args.batch, args.seq)
         t0 = time.time()
-        params, state, prev, m = round_fn(
-            params, state, prev, {"tokens": jnp.asarray(toks)}, sel, sizes,
-            jnp.int32(r),
-        )
+        state, m = round_fn(state, {"tokens": jnp.asarray(toks)}, sel, sizes)
         if r % 5 == 0 or r == args.rounds - 1:
             w = np.asarray(m["weights"])
             print(f"round {r:4d} loss {float(m['loss']):.4f} "
                   f"div {float(m['divergence']):.3f} "
                   f"w=[{', '.join(f'{x:.3f}' for x in w)}] "
                   f"({time.time()-t0:.1f}s)")
-    ckpt.save(args.out, {"params": params,
-                         "angles": {"smoothed": state.smoothed,
-                                    "count": state.count}})
+    ckpt.save(args.out, {"params": state.params,
+                         "angles": {"smoothed": state.angle.smoothed,
+                                    "count": state.angle.count}})
     print("checkpoint ->", args.out)
 
 

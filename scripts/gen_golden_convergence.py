@@ -8,6 +8,12 @@ claims and re-runs against; regenerate ONLY when an intentional algorithm
 change shifts convergence, and eyeball the diff — fedadp must stay <=
 fedavg and every wire within 10% of the f32/f32 reference.
 
+The trajectories come from the DEVICE-RNG data pipeline (core.driver:
+on-device epoch permutations + client selection, eval_every=1 for exact
+round counts) — the stepwise and scanned drivers share it, so one golden
+pins both; tests/test_driver.py re-converges a subset through the
+scanned path.
+
 Usage:  PYTHONPATH=src python scripts/gen_golden_convergence.py
 """
 import json
@@ -31,7 +37,7 @@ TASK = {
     "seed": 0,
     "engine": "flat",
     "group_size": 512,
-    "eval_every": 2,
+    "eval_every": 1,
 }
 
 

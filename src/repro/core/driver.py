@@ -1,0 +1,263 @@
+"""Device-resident federated training driver.
+
+`core.server.FedServer` used to pay a full host round-trip per round:
+numpy epoch batching, one jit dispatch, a `device_get`, and a host-side
+eval — so on small models the wall clock was dominated by dispatch/sync
+overhead rather than the round kernels. This module moves the whole loop
+onto the device:
+
+* **Data pipeline** — the node datasets are stacked ONCE into device
+  arrays (`stack_nodes`); per-round, per-client epoch permutations are
+  drawn with `jax.random` inside the compiled step (`epoch_batches`), so
+  no host batching or H2D copy happens between rounds. Ragged node sizes
+  are handled by a masked-argsort permutation (padding rows are never
+  sampled); `batch_size > min node size` (tau = 0 local steps) raises a
+  clear ValueError naming the offending node instead of a reshape error.
+
+* **Round step** — `make_step_fn` folds client selection (device RNG,
+  subset without replacement), batching, the `fl.make_round_fn` round,
+  and an optional in-scan eval into one `step(state, eval_every)` whose
+  carry is the unified `fl.RoundState`. The same step drives BOTH the
+  stepwise server (one jit dispatch per round — the per-round tests'
+  path) and the scanned driver, which is what pins scanned == stepwise.
+
+* **Scanned driver** — `make_scan_runner` wraps the step in a
+  `lax.scan` over a block of E rounds (jit-compiled once per block
+  length, state buffers donated so params/EF update in place off-CPU);
+  `run_rounds` chains blocks with a host-side early-exit check between
+  them, preserving the paper's Table-I semantics exactly: an eval fires
+  after rounds where (r+1) % eval_every == 0, and rounds_to_target is
+  the first such round whose accuracy reaches the target (the scan may
+  run up to one block past it; the report is exact).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fl as fl_mod
+
+PyTree = Any
+
+
+class ClientData(NamedTuple):
+    """Device-resident stacked node datasets.
+
+    x/y are stacked over the client axis and zero-padded to the largest
+    node (`sizes` keeps the true per-node counts; the epoch permutation
+    never samples a padded row). `tau` = n_i // batch_size is the static
+    per-round local step count — equal across nodes by construction
+    (stacked (K, tau, B, ...) round batches admit exactly one tau).
+    """
+
+    x: jax.Array  # (C, n_max, ...) features
+    y: jax.Array  # (C, n_max) int labels
+    sizes: jax.Array  # (C,) i32 true per-node sample counts
+    tau: int  # local steps per round (static)
+    batch_size: int  # B (static)
+
+
+def stack_nodes(nodes: list, batch_size: int) -> ClientData:
+    """Stack host node datasets into one device-resident ClientData.
+
+    Raises ValueError when a node is too small for even one batch
+    (tau = len // batch_size = 0 — the old numpy batcher crashed with an
+    opaque reshape error here) or when nodes disagree on tau.
+    """
+    taus = [len(ds.y) // batch_size for ds in nodes]
+    for i, (ds, tau) in enumerate(zip(nodes, taus)):
+        if tau < 1:
+            raise ValueError(
+                f"node {i} has {len(ds.y)} samples but batch_size="
+                f"{batch_size}: tau = {len(ds.y)}//{batch_size} = 0 local "
+                "steps — lower batch_size or grow the node's dataset")
+    if len(set(taus)) != 1:
+        raise ValueError(
+            f"nodes disagree on local steps tau = n_i//batch_size: {taus} "
+            "— stacked (K, tau, B, ...) round batches admit exactly one "
+            "tau (equalize node sizes or batch them separately)")
+    n_max = max(len(ds.y) for ds in nodes)
+
+    def pad(a):
+        if a.shape[0] == n_max:
+            return a
+        fill = np.zeros((n_max - a.shape[0],) + a.shape[1:], a.dtype)
+        return np.concatenate([a, fill])
+
+    return ClientData(
+        x=jnp.asarray(np.stack([pad(np.asarray(ds.x)) for ds in nodes])),
+        y=jnp.asarray(np.stack([pad(np.asarray(ds.y)) for ds in nodes])),
+        sizes=jnp.asarray([len(ds.y) for ds in nodes], jnp.int32),
+        tau=taus[0],
+        batch_size=batch_size,
+    )
+
+
+def select_clients(key, num_clients: int, k: int) -> jax.Array:
+    """(k,) i32 population slots for this round's cohort.
+
+    Full participation (k >= num_clients) is the deterministic identity —
+    matching the host server's old behaviour bit-for-bit; a strict subset
+    is drawn uniformly without replacement from the device RNG.
+    """
+    if k >= num_clients:
+        return jnp.arange(num_clients, dtype=jnp.int32)
+    return jax.random.permutation(key, num_clients)[:k].astype(jnp.int32)
+
+
+def epoch_batches(key, data: ClientData, sel: jax.Array):
+    """One epoch of shuffled minibatches per selected client, on device.
+
+    Returns (xb, yb) with leaves (K, tau, B, ...) — the paper's
+    tau = E*D_i/B with E=1, exactly what the numpy `_epoch_batcher`
+    yielded, but drawn from the device RNG: per-client keys are folded
+    from the GLOBAL population slot, so a client's stream depends only on
+    (round key, client id), never on who else was selected. Ragged node
+    sizes use a masked argsort (rows past sizes[c] get +inf and sort
+    last), so padding is never sampled.
+    """
+    count = data.tau * data.batch_size
+    n_max = data.x.shape[1]
+
+    def one(c):
+        k = jax.random.fold_in(key, c)
+        u = jax.random.uniform(k, (n_max,))
+        u = jnp.where(jnp.arange(n_max) < data.sizes[c], u, jnp.inf)
+        idx = jnp.argsort(u)[:count]
+        xb = data.x[c][idx].reshape(
+            (data.tau, data.batch_size) + data.x.shape[2:])
+        yb = data.y[c][idx].reshape(data.tau, data.batch_size)
+        return xb, yb
+
+    return jax.vmap(one)(sel)
+
+
+def make_eval_fn(apply_fn: Callable, test_x, test_y,
+                 chunk: int = 2048) -> Callable:
+    """Device-side test accuracy: params -> f32 fraction correct.
+
+    The test set is padded to a multiple of `chunk` with label -1 (argmax
+    over real logits is never negative, so padding can't score) and
+    scanned in chunks, bounding eval activation memory for conv models.
+    """
+    n = test_x.shape[0]
+    chunk = min(chunk, n)
+    m = -(-n // chunk)
+    pad = m * chunk - n
+    xs = jnp.concatenate(
+        [jnp.asarray(test_x),
+         jnp.zeros((pad,) + test_x.shape[1:], test_x.dtype)])
+    ys = jnp.concatenate(
+        [jnp.asarray(test_y, jnp.int32), jnp.full((pad,), -1, jnp.int32)])
+    xs = xs.reshape((m, chunk) + test_x.shape[1:])
+    ys = ys.reshape(m, chunk)
+
+    def eval_fn(params):
+        def body(tot, xy):
+            xc, yc = xy
+            pred = jnp.argmax(apply_fn(params, xc), axis=-1)
+            return tot + jnp.sum((pred == yc).astype(jnp.int32)), None
+
+        correct, _ = jax.lax.scan(body, jnp.int32(0), (xs, ys))
+        return correct.astype(jnp.float32) / n
+
+    return eval_fn
+
+
+def make_step_fn(loss_fn: Callable, fl: fl_mod.FLConfig, data: ClientData,
+                 *, eval_fn: Optional[Callable] = None,
+                 angle_pred: Optional[Callable] = None,
+                 mesh=None) -> Callable:
+    """One fully device-resident federated round.
+
+    step(state, eval_every) -> (state, metrics): split the state's RNG,
+    select this round's cohort, draw each client's epoch batches, run the
+    compiled round, and (when `eval_fn` is given) conditionally append
+    `metrics["accuracy"]` — evaluated only after rounds where
+    round % eval_every == 0 post-increment (i.e. (r+1) % eval_every == 0),
+    -1.0 otherwise, so the eval forward pass is skipped via `lax.cond` on
+    non-eval rounds. `eval_every` is a traced i32 (0 disables eval
+    without recompiling).
+
+    The SAME function is the stepwise server's jitted step and the
+    scanned driver's scan body — equivalence by construction.
+    """
+    round_fn = fl_mod.make_round_fn(loss_fn, fl, angle_pred=angle_pred,
+                                    mesh=mesh)
+
+    def step(state: fl_mod.RoundState, eval_every):
+        rng, k_sel, k_bat = jax.random.split(state.rng, 3)
+        sel = select_clients(k_sel, fl.num_clients, fl.clients_per_round)
+        batches = epoch_batches(k_bat, data, sel)
+        sizes = data.sizes[sel].astype(jnp.float32)
+        state, metrics = round_fn(state._replace(rng=rng), batches, sel,
+                                  sizes)
+        if eval_fn is not None:
+            do_eval = (eval_every > 0) & (state.round % eval_every == 0)
+            acc = jax.lax.cond(do_eval, eval_fn,
+                               lambda p: jnp.float32(-1.0), state.params)
+            metrics = dict(metrics, accuracy=acc)
+        return state, metrics
+
+    return step
+
+
+def make_scan_runner(step_fn: Callable, donate: Optional[bool] = None):
+    """jit-compiled `lax.scan` of `step_fn` over a static block length.
+
+    run_block(state, eval_every, length=E) -> (state, stacked metrics).
+    The RoundState carry is donated (params/EF buffers update in place)
+    on backends that implement donation; CPU XLA does not, so donation
+    defaults off there to avoid per-call warnings.
+    """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+
+    def run_block(state, eval_every, length):
+        def body(s, _):
+            return step_fn(s, eval_every)
+
+        return jax.lax.scan(body, state, length=length)
+
+    kw = {"static_argnames": ("length",)}
+    if donate:
+        kw["donate_argnums"] = (0,)
+    return jax.jit(run_block, **kw)
+
+
+def run_rounds(run_block: Callable, state: fl_mod.RoundState, rounds: int,
+               *, eval_every: int = 1, target_acc: Optional[float] = None,
+               block: int = 8):
+    """Chunked scan over rounds with host-side early exit.
+
+    Scans `block` rounds per dispatch (one compile per distinct block
+    length — at most two: the block and the final remainder); between
+    blocks the host checks the in-scan eval accuracies against
+    `target_acc`. Table-I semantics are preserved: rounds_to_target is
+    the exact (r+1) of the first eval round at or above the target, even
+    though the device may have run to the end of that block.
+
+    Returns (state, metrics, rounds_to_target, rounds_run) where metrics
+    holds per-round host arrays stacked over every round actually run.
+    """
+    blocks = []
+    done = 0
+    rounds_to_target = None
+    while done < rounds and rounds_to_target is None:
+        length = min(block, rounds - done)
+        state, ms = run_block(state, jnp.int32(eval_every), length=length)
+        ms = jax.device_get(ms)
+        blocks.append(ms)
+        if target_acc is not None and "accuracy" in ms:
+            hit = np.flatnonzero(np.asarray(ms["accuracy"]) >= target_acc)
+            if hit.size:
+                rounds_to_target = done + int(hit[0]) + 1
+        done += length
+    metrics = {
+        k: np.concatenate([np.atleast_1d(np.asarray(m[k])) for m in blocks])
+        for k in blocks[0]
+    } if blocks else {}
+    return state, metrics, rounds_to_target, done

@@ -28,11 +28,21 @@ client-row-sharded under shard_map), the sequential scan feeds it one
 Angle convention: the paper defines θ_i between ∇F and ∇F_i with
 ∇F_i = -Δ_i/η (Alg. 1 l.9); the -1/η factors cancel in the cosine, so we
 correlate deltas directly.
+
+Round-state contract: every engine threads ONE `RoundState` pytree — the
+server-side carry of a federated round (params, Eq. 9 angle state, the
+previous aggregated delta, both error-feedback residuals, the previous
+broadcast for delta-encoded downlinks, the device RNG key, and the round
+counter). `round_fn(state, batches, sel_idx, data_sizes) -> (state,
+metrics)` is the uniform signature for parallel tree/flat/flat_sharded
+and the sequential scan alike, which is what lets `core.driver` fold a
+whole training run into a single `lax.scan` with the state as the carry.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+import math
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -107,18 +117,31 @@ class FLConfig:
     # is preserved by construction. The server always applies the
     # aggregated delta to its own uncompressed master params.
     downlink: str = "f32"  # f32 | bf16 | int8
+    # Delta-encode the broadcast: ship the quantized model DIFF against
+    # the previous round's reconstructed broadcast instead of the full
+    # model (`transport.downlink.delta_compress` on the raveled (1, N)
+    # diff). Per-round deltas are orders of magnitude smaller than the
+    # params themselves, so the same wire format reconstructs them far
+    # more accurately (the int8 scale tracks the diff's absmax, not the
+    # model's). Requires downlink != "f32" (an exact broadcast has no
+    # reason to diff) and threads `RoundState.prev_broadcast` — the (N,)
+    # reconstruction every client saw last round, zeros at init so round
+    # 0 broadcasts the full model. Composes with downlink_error_feedback
+    # (the EF residual rides on the diff before compression).
+    downlink_delta: bool = False
     # Carry the per-client quantization residual across rounds (EF-SGD) so
     # the compressed angle statistics stay unbiased over time. Requires
-    # transport != "f32" and parallel mode; round_fn then takes a trailing
-    # ef_state (num_clients, N) f32 array and returns its update as a 5th
-    # output (see transport.init_error_feedback).
+    # transport != "f32" and parallel mode; the residual lives in
+    # `RoundState.ef` — a (num_clients, N) f32 array
+    # (transport.init_error_feedback) that `init_round_state` allocates
+    # and round_fn updates in place of the old trailing ef_state output.
     error_feedback: bool = False
     # Server-side EF mirror for the downlink: carry the broadcast residual
     # params - dequant(quant(params)) across rounds so the model the
-    # clients see is unbiased over time. Requires downlink != "f32";
-    # round_fn then takes a trailing dl_state (N,) f32 vector
-    # (transport.downlink.init_downlink_error_feedback) and returns its
-    # update as the last output.
+    # clients see is unbiased over time. Requires downlink != "f32"; the
+    # residual lives in `RoundState.dl_ef` — an (N,) f32 vector
+    # (transport.downlink.init_downlink_error_feedback) allocated by
+    # `init_round_state` and updated by round_fn each round.
     downlink_error_feedback: bool = False
     # Pallas interpret mode for engine="flat": None = auto (interpret
     # everywhere except a real TPU backend), or force True/False.
@@ -128,6 +151,64 @@ class FLConfig:
     angle_filter: str = "all"  # all | dense_only
     # fedprox (Li et al. 2018) baseline: mu/2 ||w - w_global||^2 proximal term
     prox_mu: float = 0.0
+
+
+class RoundState(NamedTuple):
+    """The unified server-side carry of a federated round.
+
+    One pytree threaded identically through every engine (tree / flat /
+    flat_sharded / sequential): `round_fn(state, batches, sel_idx,
+    data_sizes) -> (state, metrics)`. Because the whole carry is a single
+    pytree with a STATIC structure, `core.driver` can scan it over rounds
+    (`lax.scan`) and donate its buffers so params/EF update in place.
+
+    Optional fields are None when the matching FLConfig flag is off —
+    None is an empty pytree, so the carry structure stays fixed per
+    config and the scan carry never changes shape.
+    """
+
+    params: PyTree  # the server's uncompressed master model
+    angle: AngleState  # Eq. 9 smoothed angles + participation counts
+    prev_delta: PyTree  # last aggregated global delta, f32 leaves
+    #   (the stale_angles reference; threaded untouched otherwise)
+    ef: Optional[jax.Array] = None  # (num_clients, N) uplink EF residual
+    dl_ef: Optional[jax.Array] = None  # (N,) downlink EF residual
+    prev_broadcast: Optional[jax.Array] = None  # (N,) last broadcast
+    #   reconstruction (downlink_delta; zeros -> round 0 ships the model)
+    rng: Optional[jax.Array] = None  # device PRNG key — owned by the
+    #   data/selection pipeline (core.driver); round_fn threads it as-is
+    round: Any = 0  # i32 round counter (drives the lr schedule)
+
+
+def param_count(params: PyTree) -> int:
+    """Total scalar parameter count N (the flat-buffer width)."""
+    return sum(math.prod(p.shape) for p in jax.tree.leaves(params))
+
+
+def init_round_state(fl: FLConfig, params: PyTree,
+                     seed: "int | jax.Array" = 0) -> RoundState:
+    """Fresh RoundState for `params` under `fl`.
+
+    Allocates exactly the optional buffers the config calls for (uplink
+    EF rows, downlink EF vector, previous-broadcast vector) so the state
+    structure is a pure function of the config. `seed` is an int (a new
+    `jax.random.key` is made) or an existing PRNG key array.
+    """
+    n = param_count(params)
+    rng = seed if isinstance(seed, jax.Array) else jax.random.key(seed)
+    return RoundState(
+        params=params,
+        angle=AngleState.init(fl.num_clients),
+        prev_delta=init_prev_delta(params),
+        ef=(transport_mod.init_error_feedback(fl.num_clients, n)
+            if fl.error_feedback else None),
+        dl_ef=(transport_mod.downlink.init_downlink_error_feedback(n)
+               if fl.downlink_error_feedback else None),
+        prev_broadcast=(transport_mod.downlink.init_prev_broadcast(n)
+                        if fl.downlink_delta else None),
+        rng=rng,
+        round=jnp.int32(0),
+    )
 
 
 def local_update(loss_fn: Callable, params: PyTree, batches: PyTree, lr,
@@ -211,33 +292,34 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
                   mesh=None) -> Callable:
     """Build the jit-able federated round.
 
-    round_fn(params, angle_state, prev_delta, batches, sel_idx,
-             data_sizes, round_idx)
-      -> (params, angle_state, new_prev_delta, metrics)
+    round_fn(state, batches, sel_idx, data_sizes) -> (state, metrics)
 
-    batches leaves: (K, tau, B, ...); sel_idx (K,) int32 population slots;
-    data_sizes (K,) f32. `prev_delta` is used only by stale_angles (pass
-    zeros-like(params) otherwise; it is threaded through untouched).
+    `state` is a `RoundState` (see `init_round_state`) and is threaded
+    IDENTICALLY through every engine — params, Eq. 9 angle state, the
+    previous aggregated delta, both EF residuals, the previous broadcast
+    (downlink_delta), the device RNG key (untouched here; the driver's
+    data pipeline owns it), and the round counter (incremented here; it
+    drives the lr schedule). batches leaves: (K, tau, B, ...); sel_idx
+    (K,) int32 population slots; data_sizes (K,) f32.
     `delta_constraint` optionally applies sharding constraints to the
     stacked deltas (parallel mode). `mesh` is required by
     engine="flat_sharded" (the client axis of the flat buffer is sharded
     over the mesh's ("pod","data") axes; K not divisible by the client
     axis is zero-padded before sharding) and ignored otherwise.
 
-    With `fl.error_feedback` the round takes a trailing
-    `ef_state` (num_clients, N) f32 residual array
-    (`transport.init_error_feedback`) and appends `new_ef_state` to the
-    outputs; with `fl.downlink_error_feedback` it takes a trailing
-    `dl_state` (N,) f32 broadcast-residual vector
-    (`transport.downlink.init_downlink_error_feedback`) and appends
-    `new_dl_state` LAST. Output order is always
-    (params, angle_state, new_prev_delta, metrics[, new_ef][, new_dl]).
+    With `fl.error_feedback` the round reads and rewrites `state.ef`
+    ((num_clients, N) f32, rows of unselected clients untouched); with
+    `fl.downlink_error_feedback` it reads and rewrites `state.dl_ef`
+    ((N,) f32). `init_round_state` allocates both; a state missing a
+    required buffer raises at call time.
 
     `fl.downlink` != "f32" compresses the broadcast global model before
     the clients' local updates (every engine trains from the identical
     dequantized reconstruction; the aggregated delta is applied to the
     server's uncompressed master params), and `fl.transport` the client
     uplink ("int4" adds `fl.group_size`-wide grouped scales).
+    `fl.downlink_delta` broadcasts the compressed diff against
+    `state.prev_broadcast` instead of the full model.
 
     When `angle_pred` is None, `fl.angle_filter` selects a built-in
     predicate ("dense_only" -> `moe_dense_only_pred`); an explicit
@@ -267,6 +349,12 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
         raise ValueError(
             "downlink_error_feedback carries the broadcast quantization "
             "residual; downlink='f32' has none (set downlink='bf16' or "
+            "'int8')")
+    if fl.downlink_delta and fl.downlink == "f32":
+        raise ValueError(
+            "downlink_delta broadcasts the quantized model diff against "
+            "the previous broadcast; downlink='f32' ships exact params "
+            "and has nothing to gain from it (set downlink='bf16' or "
             "'int8')")
     if fl.engine == "flat_sharded" and mesh is None:
         raise ValueError(
@@ -324,19 +412,25 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
         row_sharding = fl_shard_map.flat_client_sharding(mesh)
         csize = fl_shard_map.client_axis_size(mesh)
 
-    def round_fn(params, angle_state: AngleState, prev_delta, batches,
-                 sel_idx, data_sizes, round_idx, ef_state=None,
-                 dl_state=None):
-        if fl.error_feedback and ef_state is None:
+    def round_fn(state: RoundState, batches, sel_idx, data_sizes):
+        if fl.error_feedback and state.ef is None:
             raise ValueError(
-                "fl.error_feedback=True: pass ef_state (see "
-                "transport.init_error_feedback) as the round's 8th argument")
-        if fl.downlink_error_feedback and dl_state is None:
+                "fl.error_feedback=True: state.ef is missing — build the "
+                "state with fl.init_round_state (or "
+                "transport.init_error_feedback)")
+        if fl.downlink_error_feedback and state.dl_ef is None:
             raise ValueError(
-                "fl.downlink_error_feedback=True: pass dl_state (see "
-                "transport.downlink.init_downlink_error_feedback) as the "
-                "round's 9th argument")
-        lr = _lr_at(fl, round_idx)
+                "fl.downlink_error_feedback=True: state.dl_ef is missing "
+                "— build the state with fl.init_round_state (or "
+                "transport.downlink.init_downlink_error_feedback)")
+        if fl.downlink_delta and state.prev_broadcast is None:
+            raise ValueError(
+                "fl.downlink_delta=True: state.prev_broadcast is missing "
+                "— build the state with fl.init_round_state (or "
+                "transport.downlink.init_prev_broadcast)")
+        params, angle_state = state.params, state.angle
+        ef_state, dl_state = state.ef, state.dl_ef
+        lr = _lr_at(fl, state.round)
 
         # ---- server -> client downlink: compress the broadcast model ----
         # The server keeps `params` as its uncompressed master copy (the
@@ -344,9 +438,14 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
         # from the SAME dequantized reconstruction, so the three engines
         # cannot fork — the branch is upstream of all of them.
         params_srv = params
-        new_dl = None
+        new_dl, new_bcast = dl_state, state.prev_broadcast
         if fl.downlink != "f32":
             pvec, punravel = treemath.tree_ravel(params)
+            if fl.downlink_delta:
+                # delta encoding: compress the model DIFF against the
+                # reconstruction every client already holds — per-round
+                # diffs are small, so the quant scales track them tightly.
+                pvec = pvec - state.prev_broadcast
             if fl.downlink_error_feedback:
                 # EF-SGD mirror: replay the carried broadcast residual,
                 # then carry what this round's compression drops.
@@ -355,6 +454,9 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             recon = transport_mod.downlink.decompress(qd)
             if fl.downlink_error_feedback:
                 new_dl = pvec - recon
+            if fl.downlink_delta:
+                recon = state.prev_broadcast + recon
+                new_bcast = recon
             params = punravel(recon)
 
         deltas, losses = jax.vmap(
@@ -365,7 +467,7 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             deltas = delta_constraint(deltas)
 
         psi_avg = weighting.fedavg_weights(data_sizes)
-        new_ef = None
+        new_ef = ef_state
 
         # ---- client uplink: compress the stacked deltas to the wire ----
         if fl.transport != "f32":
@@ -520,21 +622,21 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             "cos": jnp.cos(theta),
             "expected_contribution": weighting.expected_contribution(w, jnp.cos(theta)),
         }
-        outs = (new_params, new_state, g_avg, metrics)
-        if fl.error_feedback:
-            outs = outs + (new_ef,)
-        if fl.downlink_error_feedback:
-            outs = outs + (new_dl,)
-        return outs
+        return state._replace(
+            params=new_params, angle=new_state, prev_delta=g_avg,
+            ef=new_ef, dl_ef=new_dl, prev_broadcast=new_bcast,
+            round=state.round + 1,
+        ), metrics
 
     return round_fn
 
 
 def _make_sequential_round(loss_fn, fl: FLConfig, angle_pred=None,
                            grad_constraint=None):
-    def round_fn(params, angle_state: AngleState, prev_delta, batches,
-                 sel_idx, data_sizes, round_idx):
-        lr = _lr_at(fl, round_idx)
+    def round_fn(state: RoundState, batches, sel_idx, data_sizes):
+        params, angle_state = state.params, state.angle
+        prev_delta = state.prev_delta
+        lr = _lr_at(fl, state.round)
         interpret = _resolve_interpret(fl)
         # one stats implementation across modes: pass-2 statistics stream
         # through the round_stats kernel as a single-row (1, N) buffer per
@@ -607,7 +709,10 @@ def _make_sequential_round(loss_fn, fl: FLConfig, angle_pred=None,
             "divergence": div, "lr": lr, "cos": jnp.cos(theta),
             "expected_contribution": weighting.expected_contribution(w, jnp.cos(theta)),
         }
-        return new_params, new_state, g_acc, metrics
+        return state._replace(
+            params=new_params, angle=new_state, prev_delta=g_acc,
+            round=state.round + 1,
+        ), metrics
 
     return round_fn
 

@@ -30,6 +30,12 @@ Two engines share this schedule:
 replicated O(K) weighting, and the aggregate psum — as ONE shard_map
 region; core/fl.py's `engine="flat_sharded"` round path reuses it so the
 pjit and shard_map stacks aggregate through literally the same kernels.
+The RoundState contract lives one level up: core/fl.py gathers the
+selected clients' Eq. 9 slots out of `RoundState.angle` before entering
+this region and scatters the results back after it, so the shard_map
+schedule stays a pure (K,)-shaped aggregation op and the region composes
+unchanged with the scanned driver (`core.driver` puts the whole round —
+this region included — inside `lax.scan`).
 
 Works on any mesh whose client axis is "data" (+"pod") and whose tensor
 axes follow models/sharding.param_pspecs; on a 1x1 host mesh it reduces to

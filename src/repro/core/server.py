@@ -1,21 +1,31 @@
 """Federated server loop for the paper's classification experiments.
 
-Hosts the node datasets, performs client selection, feeds per-round
-mini-batch tensors into the compiled round function, evaluates test
-accuracy, and tracks rounds-to-target — the paper's Table-I metric.
+A thin host-side wrapper over the device-resident driver
+(`core.driver`): the node datasets are stacked onto the device once, and
+every round — client selection, per-client epoch batching, the compiled
+round itself, and the test eval — runs from the device RNG inside one
+compiled step whose carry is the unified `fl.RoundState`.
+
+Two execution modes share that step bit-for-bit:
+
+* `step()` / `run()` — stepwise: one jit dispatch + `device_get` per
+  round (the per-round tests' path, and the easiest to poke at).
+* `run_scanned()` — the whole run as chunked `lax.scan` blocks with
+  host-side early exit between blocks (`driver.run_rounds`), removing
+  the per-round dispatch/sync overhead entirely. Table-I semantics
+  (eval cadence, rounds-to-target) are preserved exactly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import transport as transport_mod
+from repro.core import driver as driver_mod
 from repro.core import fl as fl_mod
-from repro.core.weighting import AngleState
 from repro.data.synthetic import Dataset
 from repro.models import small
 
@@ -32,7 +42,7 @@ class History:
 
 
 class FedServer:
-    """Cross-device FL simulation on host numpy data (paper Section V)."""
+    """Cross-device FL simulation, device-resident (paper Section V)."""
 
     def __init__(
         self,
@@ -42,104 +52,87 @@ class FedServer:
         test: Dataset,
         batch_size: int,
         seed: int = 0,
-        angle_pred: Optional[Callable] = None,
+        angle_pred=None,
         mesh=None,
     ):
         # fl.engine selects the round execution path ("tree" reference,
         # the flat-buffer Pallas path, or the client-sharded
         # "flat_sharded" variant — the latter needs `mesh`) and
         # fl.angle_filter the built-in angle predicate; all flow through
-        # make_round_fn unchanged.
+        # make_round_fn unchanged. fl.transport compresses the client
+        # uplink and fl.downlink the server broadcast (optionally
+        # delta-encoded via fl.downlink_delta); the EF residual carries
+        # live inside the RoundState.
         self.fl = fl
         self.nodes = nodes
         self.test = test
         self.batch_size = batch_size
-        self.rng = np.random.default_rng(seed)
         init_fn, self.apply_fn = small.MODELS[model]
-        self.params = init_fn(jax.random.key(seed))
 
         def loss_fn(params, batch):
             x, y = batch
             return small.classification_loss(self.apply_fn, params, x, y)
 
-        self.round_fn = jax.jit(
-            fl_mod.make_round_fn(loss_fn, fl, angle_pred=angle_pred,
-                                 mesh=mesh))
-        self.angle_state = AngleState.init(fl.num_clients)
-        self.prev_delta = fl_mod.init_prev_delta(self.params)
-        # fl.transport compresses the client uplink and fl.downlink the
-        # server broadcast; with the respective error_feedback flags the
-        # quantization residuals are carried between rounds (per-client
-        # rows for the uplink, one server-side vector for the downlink).
-        n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(self.params))
-        self.ef_state = None
-        if fl.error_feedback:
-            self.ef_state = transport_mod.init_error_feedback(
-                fl.num_clients, n)
-        self.dl_state = None
-        if fl.downlink_error_feedback:
-            self.dl_state = (
-                transport_mod.downlink.init_downlink_error_feedback(n))
-        self.round = 0
-        self._iters = [
-            _epoch_batcher(ds, batch_size, seed + 17 * i)
-            for i, ds in enumerate(nodes)
-        ]
+        self.data = driver_mod.stack_nodes(nodes, batch_size)
+        eval_fn = driver_mod.make_eval_fn(self.apply_fn, test.x, test.y)
+        self._step_fn = driver_mod.make_step_fn(
+            loss_fn, fl, self.data, eval_fn=eval_fn, angle_pred=angle_pred,
+            mesh=mesh)
+        self._step_jit = jax.jit(self._step_fn)
+        self._run_block = driver_mod.make_scan_runner(self._step_fn)
 
-    def _select(self) -> np.ndarray:
-        k = self.fl.clients_per_round
-        if k >= self.fl.num_clients:
-            return np.arange(self.fl.num_clients)
-        return self.rng.choice(self.fl.num_clients, size=k, replace=False)
+        def fresh_state(s: int) -> fl_mod.RoundState:
+            # one seed, two independent streams: weight init and the
+            # driver's selection/batching RNG must not share key material
+            k_init, k_drv = jax.random.split(jax.random.key(s))
+            return fl_mod.init_round_state(fl, init_fn(k_init), seed=k_drv)
 
-    def _round_batches(self, sel: np.ndarray):
-        xs, ys = [], []
-        for i in sel:
-            bx, by = next(self._iters[i])
-            xs.append(bx)
-            ys.append(by)
-        return (
-            jnp.asarray(np.stack(xs)),  # (K, tau, B, ...)
-            jnp.asarray(np.stack(ys)),
-        )
+        self._fresh_state = fresh_state
+        self._seed = seed
+        self.state = fresh_state(seed)
 
-    def step(self) -> dict:
-        sel = self._select()
-        batches = self._round_batches(sel)
-        sizes = jnp.asarray([len(self.nodes[i].y) for i in sel], jnp.float32)
-        args = (self.params, self.angle_state, self.prev_delta, batches,
-                jnp.asarray(sel, jnp.int32), sizes, jnp.int32(self.round))
-        # round_fn appends new_ef / new_dl to its outputs in that order
-        # when the matching EF state is threaded (see fl.make_round_fn).
-        kw = {}
-        if self.ef_state is not None:
-            kw["ef_state"] = self.ef_state
-        if self.dl_state is not None:
-            kw["dl_state"] = self.dl_state
-        outs = self.round_fn(*args, **kw)
-        (self.params, self.angle_state, self.prev_delta, metrics), rest = (
-            outs[:4], list(outs[4:]))
-        if self.ef_state is not None:
-            self.ef_state = rest.pop(0)
-        if self.dl_state is not None:
-            self.dl_state = rest.pop(0)
-        self.round += 1
+    def reset(self, seed: Optional[int] = None) -> None:
+        """Reinitialize the RoundState (fresh params, angles, RNG stream)
+        WITHOUT re-jitting — e.g. warm the jit cache with a throwaway
+        round, then reset before a timed or recorded run."""
+        self.state = self._fresh_state(self._seed if seed is None else seed)
+
+    # RoundState is the single source of truth; these views keep the
+    # pre-refactor attribute surface (checkpointing, tests, examples).
+    @property
+    def params(self):
+        return self.state.params
+
+    @property
+    def angle_state(self):
+        return self.state.angle
+
+    @property
+    def round(self) -> int:
+        return int(self.state.round)
+
+    def step(self, eval_every: int = 0) -> dict:
+        """One stepwise round; returns host metrics. eval_every > 0 adds
+        metrics["accuracy"] after rounds where (r+1) % eval_every == 0
+        (-1.0 on other rounds)."""
+        self.state, metrics = self._step_jit(self.state,
+                                             jnp.int32(eval_every))
         return jax.device_get(metrics)
 
     def evaluate(self) -> float:
-        return small.accuracy(self.apply_fn, self.params, self.test.x, self.test.y)
+        """Host-side test accuracy of the current master params."""
+        return small.accuracy(self.apply_fn, self.state.params,
+                              self.test.x, self.test.y)
 
     def run(self, rounds: int, target_acc: Optional[float] = None,
             eval_every: int = 1, verbose: bool = False) -> History:
+        """Stepwise training loop (one dispatch per round)."""
         hist = History([], [], [], None, 0.0, [], [])
         for r in range(rounds):
-            m = self.step()
-            hist.loss.append(float(m["loss"]))
-            hist.divergence.append(float(m["divergence"]))
-            hist.thetas.append(np.asarray(m["theta_smoothed"]))
-            hist.weights.append(np.asarray(m["weights"]))
-            if (r + 1) % eval_every == 0:
-                acc = self.evaluate()
+            m = self.step(eval_every=eval_every)
+            self._append(hist, m)
+            acc = float(m["accuracy"])
+            if acc >= 0.0:
                 hist.accuracy.append(acc)
                 if verbose:
                     print(f"round {r+1:4d} loss {m['loss']:.4f} acc {acc:.4f}")
@@ -149,13 +142,46 @@ class FedServer:
         hist.final_accuracy = hist.accuracy[-1] if hist.accuracy else 0.0
         return hist
 
+    def run_scanned(self, rounds: int, target_acc: Optional[float] = None,
+                    eval_every: int = 1, block: int = 8) -> History:
+        """The same run as chunked `lax.scan` blocks (driver.run_rounds):
+        `block` rounds per dispatch, host early-exit between blocks.
+        Matches `run()`'s trajectory to float tolerance (the step function
+        is shared; only the dispatch granularity differs) and its History
+        semantics exactly — per-round entries stop at rounds_to_target."""
+        self.state, ms, rtt, ran = driver_mod.run_rounds(
+            self._run_block, self.state, rounds, eval_every=eval_every,
+            target_acc=target_acc, block=block)
+        hist = History([], [], [], rtt, 0.0, [], [])
+        stop = rtt if rtt is not None else ran
+        for r in range(stop):
+            self._append(hist, {k: v[r] for k, v in ms.items()})
+            acc = float(ms["accuracy"][r])
+            if acc >= 0.0:
+                hist.accuracy.append(acc)
+        hist.final_accuracy = hist.accuracy[-1] if hist.accuracy else 0.0
+        return hist
+
+    @staticmethod
+    def _append(hist: History, m: dict) -> None:
+        hist.loss.append(float(m["loss"]))
+        hist.divergence.append(float(m["divergence"]))
+        hist.thetas.append(np.asarray(m["theta_smoothed"]))
+        hist.weights.append(np.asarray(m["weights"]))
+
 
 def _epoch_batcher(ds: Dataset, batch_size: int, seed: int):
-    """Yields one epoch of shuffled minibatches per call: (tau, B, ...) —
-    the paper's tau = E*D_i/B with E=1."""
-    rng = np.random.default_rng(seed)
+    """Host-side reference batcher (the driver's device pipeline replaced
+    it in FedServer): yields one epoch of shuffled minibatches per call,
+    (tau, B, ...) — the paper's tau = E*D_i/B with E=1."""
     n = len(ds.y)
     tau = n // batch_size
+    if tau < 1:
+        raise ValueError(
+            f"node dataset has {n} samples but batch_size={batch_size}: "
+            f"tau = {n}//{batch_size} = 0 local steps — lower batch_size "
+            "or grow the node's dataset")
+    rng = np.random.default_rng(seed)
     while True:
         order = rng.permutation(n)[: tau * batch_size]
         xb = ds.x[order].reshape(tau, batch_size, *ds.x.shape[1:])

@@ -42,6 +42,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax wraps it per-device
+        cost = cost[0] if cost else {}
     text = compiled.as_text()
     coll = hlo_mod.collective_bytes(text)
     # loop-aware per-device analysis (XLA cost_analysis counts while bodies

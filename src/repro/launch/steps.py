@@ -16,7 +16,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs import shapes as shapes_mod
 from repro.configs.registry import get as get_arch
 from repro.core import fl as fl_mod
-from repro.core.weighting import AngleState
 from repro.models import sharding, transformer
 from repro.models.config import ModelConfig
 
@@ -98,20 +97,21 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: shapes_mod.InputShape,
 
     p_sds = params_sds(cfg)
     prev_sds = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_sds)
-    angle_sds = AngleState(
-        smoothed=jax.ShapeDtypeStruct((K,), jnp.float32),
-        count=jax.ShapeDtypeStruct((K,), jnp.int32),
-    )
+    # one RoundState pytree carries the whole server-side round state
+    # (params, Eq. 9 angles, prev delta, RNG key, round counter) — its
+    # SDS comes from the same init the runtime uses, so the lowered
+    # signature can never drift from init_round_state's layout.
+    state_sds = jax.eval_shape(
+        functools.partial(fl_mod.init_round_state, flcfg), p_sds)
     batch_one = shapes_mod.token_batch_specs(cfg, B, shape.seq_len)
     batch_sds = {
         k: jax.ShapeDtypeStruct((K, tau) + v.shape, v.dtype)
         for k, v in batch_one.items()
     }
     args = (
-        p_sds, angle_sds, prev_sds, batch_sds,
+        state_sds, batch_sds,
         jax.ShapeDtypeStruct((K,), jnp.int32),
         jax.ShapeDtypeStruct((K,), jnp.float32),
-        jax.ShapeDtypeStruct((), jnp.int32),
     )
 
     fsdp = fl_mode == "sequential"
@@ -186,13 +186,19 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: shapes_mod.InputShape,
 
         b_shard = {k: seq_leaf(k, v) for k, v in batch_sds.items()}
     rep = lambda t: sharding.replicated(mesh, t)
-    in_shard = (
-        p_shard, rep(angle_sds), prev_shard, b_shard,
-        rep(args[4]), rep(args[5]), rep(args[6]),
-    )
+    state_shard = fl_mod.RoundState(
+        params=p_shard, angle=rep(state_sds.angle), prev_delta=prev_shard,
+        ef=None, dl_ef=None, prev_broadcast=None,
+        rng=rep(state_sds.rng), round=rep(state_sds.round))
+    in_shard = (state_shard, b_shard, rep(args[2]), rep(args[3]))
     out_sds = jax.eval_shape(round_fn, *args)
-    out_shard = (p_shard, rep(out_sds[1]), prev_shard, rep(out_sds[3]))
-    meta = {"K": K, "B": B, "tau": tau, "fl_mode": fl_mode}
+    out_shard = (state_shard, rep(out_sds[1]))
+    # flcfg determines the RoundState pytree structure, so callers that
+    # build a runtime state (launch/train.py) must use THIS config, not a
+    # hand-rebuilt copy — ship it in meta (as a JSON-safe dict; dryrun
+    # serializes meta into results/)
+    meta = {"K": K, "B": B, "tau": tau, "fl_mode": fl_mode,
+            "flcfg": dataclasses.asdict(flcfg)}
     return round_fn, args, in_shard, out_shard, meta
 
 

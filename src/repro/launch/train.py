@@ -39,7 +39,7 @@ def main() -> None:
     import numpy as np
 
     from repro.configs import registry, shapes as shapes_mod
-    from repro.core.weighting import AngleState
+    from repro.core import fl as fl_mod
     from repro.data import synthetic
     from repro.launch import steps
     from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -66,10 +66,13 @@ def main() -> None:
 
     with mesh:
         step = jax.jit(fn, in_shardings=in_shard, out_shardings=out_shard)
+        # the exact config build_train_step lowered with — RoundState's
+        # pytree structure is a function of it, so a hand-rebuilt copy
+        # could silently diverge from the compiled signature
+        flcfg = fl_mod.FLConfig(**meta["flcfg"])
         params = transformer.init_params(jax.random.key(0), cfg)
-        params = jax.device_put(params, in_shard[0])
-        state = AngleState.init(K)
-        prev = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state = fl_mod.init_round_state(flcfg, params)
+        state = jax.device_put(state, in_shard[0])
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.ones((K,))
         for r in range(args.rounds):
@@ -78,18 +81,17 @@ def main() -> None:
                 vocab=cfg.vocab_size,
             ).reshape(K, tau, B, shape.seq_len)
             batch = {"tokens": jnp.asarray(toks)}
-            for k2, spec in sds[3].items():
+            for k2, spec in sds[1].items():
                 if k2 != "tokens":
                     batch[k2] = jnp.zeros(spec.shape, spec.dtype)
             t0 = time.time()
-            params, state, prev, m = step(params, state, prev, batch, sel,
-                                          sizes, jnp.int32(r))
+            state, m = step(state, batch, sel, sizes)
             print(f"round {r:4d} loss {float(m['loss']):.4f} "
                   f"div {float(m['divergence']):.3f} ({time.time()-t0:.1f}s)")
         if args.ckpt:
             from repro.checkpoint import io as ckpt_io
 
-            ckpt_io.save(args.ckpt, {"params": params})
+            ckpt_io.save(args.ckpt, {"params": state.params})
             print("checkpoint ->", args.ckpt)
 
 

@@ -11,8 +11,10 @@ single HBM pass over ~4x (int8) / ~8x (int4) fewer bytes.
 
 Downlink — `downlink.compress` applies the same formats to the (N,)
 global model the server broadcasts back (f32 / bf16 / int8), with
-optional server-side error feedback; `round_bytes` reports both
-directions.
+optional server-side error feedback; `downlink.delta_compress` ships
+the quantized model DIFF against the previous round's reconstruction
+instead (`FLConfig(downlink_delta=True)`, carried in
+`fl.RoundState.prev_broadcast`); `round_bytes` reports both directions.
 
 Contract (ROADMAP): transport="f32" is the reference wire format and
 downlink="f32" the reference broadcast; the tree engine never reads

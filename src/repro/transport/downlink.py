@@ -21,6 +21,16 @@ uplink EF-SGD state server-side: the broadcast residual
 p - dequantize(quantize(p)) is carried across rounds and added back
 before the next compression, so the model the clients see is unbiased
 over time even though each individual broadcast is lossy.
+
+Delta encoding (`FLConfig(downlink_delta=True)`): instead of compressing
+the full model every round, `delta_compress` quantizes the DIFF between
+the current params and the previous round's reconstructed broadcast
+(`RoundState.prev_broadcast`, zeros at init so round 0 ships the full
+model). The server and every client advance the same reconstruction
+prev + dequantize(q), so the stream never drifts; because per-round
+model diffs are orders of magnitude smaller than the params, the int8
+scales track them far more tightly than a full-model broadcast at the
+same byte cost.
 """
 from __future__ import annotations
 
@@ -54,4 +64,32 @@ def broadcast_roundtrip(vec: jax.Array, downlink: str) -> jax.Array:
 def init_downlink_error_feedback(n: int) -> jax.Array:
     """(N,) f32 server-side broadcast residual carry (EF-SGD, one copy —
     the broadcast is identical for every client)."""
+    return jnp.zeros((n,), jnp.float32)
+
+
+def delta_compress(vec: jax.Array, prev: jax.Array,
+                   downlink: str) -> quantize_mod.QuantizedDelta:
+    """Compress the (N,) broadcast DIFF `vec - prev` into the downlink
+    format (`prev` is the reconstruction the clients already hold)."""
+    return compress(vec - prev, downlink)
+
+
+def delta_decompress(q: quantize_mod.QuantizedDelta,
+                     prev: jax.Array) -> jax.Array:
+    """(N,) f32 reconstruction the clients advance to: prev + deq(q)."""
+    return prev + decompress(q)
+
+
+def delta_roundtrip(vec: jax.Array, prev: jax.Array,
+                    downlink: str) -> jax.Array:
+    """delta_decompress(delta_compress(vec)) — one delta-encoded hop."""
+    if downlink == "f32":
+        return vec.astype(jnp.float32)
+    return delta_decompress(delta_compress(vec, prev, downlink), prev)
+
+
+def init_prev_broadcast(n: int) -> jax.Array:
+    """(N,) f32 previous-broadcast carry for delta encoding. Zeros: the
+    first delta-encoded broadcast is the diff against nothing, i.e. the
+    full model."""
     return jnp.zeros((n,), jnp.float32)

@@ -21,7 +21,6 @@ import numpy as np
 import pytest
 
 from repro.core import fl
-from repro.core.weighting import AngleState
 
 K = 4
 
@@ -55,16 +54,14 @@ def _run(engine, method, angle_filter="all", mode="parallel", rounds=4,
                       method=method, mode=mode, engine=engine,
                       angle_filter=angle_filter, base_lr=0.05)
     rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
-    state = AngleState.init(k)
-    prev = fl.init_prev_delta(params)
+    st = fl.init_round_state(cfg, params)
     sel = jnp.arange(k, dtype=jnp.int32)
     sizes = jnp.asarray(10.0 * (1.0 + np.arange(k, dtype=np.float32)))
     ms = []
     for r in range(rounds):
-        params, state, prev, m = rf(params, state, prev, batches, sel, sizes,
-                                    jnp.int32(r))
+        st, m = rf(st, batches, sel, sizes)
         ms.append(m)
-    return params, state, ms
+    return st.params, st.angle, ms
 
 
 def _assert_trees_close(a, b, atol=1e-5):
@@ -115,14 +112,12 @@ def test_flat_matches_tree_bf16(method):
         cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
                           method=method, engine=engine, base_lr=0.05)
         rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
-        state = AngleState.init(K)
-        prev = fl.init_prev_delta(params)
+        st = fl.init_round_state(cfg, params)
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
         for r in range(3):
-            params, state, prev, m = rf(params, state, prev, (X, Y), sel,
-                                        sizes, jnp.int32(r))
-        outs[engine] = (params, m)
+            st, m = rf(st, (X, Y), sel, sizes)
+        outs[engine] = (st.params, m)
     for a, b in zip(jax.tree.leaves(outs["tree"][0]),
                     jax.tree.leaves(outs["flat"][0])):
         assert a.dtype == jnp.bfloat16 and b.dtype == jnp.bfloat16
@@ -206,7 +201,6 @@ def test_flat_sharded_nondivisible_k_matches_tree_subprocess():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import fl
-        from repro.core.weighting import AngleState
         K, d, tau, B = 13, 12, 2, 4
         rng = np.random.default_rng(0)
         params = {"w": jnp.full((d, 1), 0.05, jnp.float32),
@@ -228,13 +222,11 @@ def test_flat_sharded_nondivisible_k_matches_tree_subprocess():
                                   engine=engine, transport=tr, downlink=dl,
                                   group_size=32, base_lr=0.05)
                 rf = jax.jit(fl.make_round_fn(loss_fn, cfg, mesh=mesh))
-                p, state = params, AngleState.init(K)
-                prev = fl.init_prev_delta(params)
+                st = fl.init_round_state(cfg, params)
                 with mesh:
                     for r in range(2):
-                        p, state, prev, m = rf(p, state, prev, (X, Y), sel,
-                                               sizes, jnp.int32(r))
-                outs[engine] = (p, m)
+                        st, m = rf(st, (X, Y), sel, sizes)
+                outs[engine] = (st.params, m)
             jax.tree.map(lambda a, b: np.testing.assert_allclose(
                 np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5),
                 outs["tree"][0], outs["flat_sharded"][0])
@@ -259,18 +251,15 @@ def test_flat_sharded_single_device_matches_flat():
     mesh = jax.make_mesh((1,), ("data",))
     outs = {}
     for engine in ("flat", "flat_sharded"):
-        params_r = params
         cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
                           method="fedadp", engine=engine, base_lr=0.05)
         rf = jax.jit(fl.make_round_fn(loss_fn, cfg, mesh=mesh))
-        state = AngleState.init(K)
-        prev = fl.init_prev_delta(params)
+        st = fl.init_round_state(cfg, params)
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
         for r in range(3):
-            params_r, state, prev, m = rf(params_r, state, prev, batches,
-                                          sel, sizes, jnp.int32(r))
-        outs[engine] = (params_r, state, m)
+            st, m = rf(st, batches, sel, sizes)
+        outs[engine] = (st.params, st.angle, m)
     _assert_trees_close(outs["flat"][0], outs["flat_sharded"][0])
     np.testing.assert_allclose(outs["flat"][1].smoothed,
                                outs["flat_sharded"][1].smoothed, atol=1e-5)
@@ -288,7 +277,6 @@ def test_flat_sharded_matches_tree_8way_subprocess():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import fl
-        from repro.core.weighting import AngleState
         K, d, tau, B = 16, 12, 3, 8
         rng = np.random.default_rng(0)
         params = {"w": jnp.zeros((d, 1), jnp.float32),
@@ -308,13 +296,11 @@ def test_flat_sharded_matches_tree_8way_subprocess():
                               local_steps=tau, method="fedadp",
                               engine=engine, base_lr=0.05)
             rf = jax.jit(fl.make_round_fn(loss_fn, cfg, mesh=mesh))
-            p, state = params, AngleState.init(K)
-            prev = fl.init_prev_delta(params)
+            st = fl.init_round_state(cfg, params)
             with mesh:
                 for r in range(3):
-                    p, state, prev, m = rf(p, state, prev, (X, Y), sel,
-                                           sizes, jnp.int32(r))
-            outs[engine] = (p, state, m)
+                    st, m = rf(st, (X, Y), sel, sizes)
+            outs[engine] = (st.params, st.angle, m)
         for engine in ("flat", "flat_sharded"):
             jax.tree.map(lambda a, b: np.testing.assert_allclose(
                 np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5),
@@ -359,11 +345,10 @@ def test_flat_engine_subset_selection():
         cfg = fl.FLConfig(num_clients=8, clients_per_round=K, local_steps=3,
                           method="fedadp", engine=engine, base_lr=0.05)
         rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
-        state = AngleState.init(8)
         sel = jnp.asarray([1, 3, 5, 7], jnp.int32)
-        p, state, _, _ = rf(params, state, fl.init_prev_delta(params),
-                            batches, sel, jnp.ones((K,)), jnp.int32(0))
-        outs[engine] = (p, state)
+        st, _ = rf(fl.init_round_state(cfg, params), batches, sel,
+                   jnp.ones((K,)))
+        outs[engine] = (st.params, st.angle)
     _assert_trees_close(outs["tree"][0], outs["flat"][0])
     np.testing.assert_allclose(outs["tree"][1].smoothed,
                                outs["flat"][1].smoothed, atol=1e-5)

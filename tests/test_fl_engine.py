@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.core import fl, treemath, weighting
-from repro.core.weighting import AngleState
 from repro.models import small
 
 
@@ -34,16 +33,14 @@ def _run(mode, method, stale=False, seed=0, rounds=3):
                       method=method, mode=mode, stale_angles=stale,
                       base_lr=0.05)
     rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
-    state = AngleState.init(K)
-    prev = fl.init_prev_delta(params)
+    st = fl.init_round_state(cfg, params)
     sel = jnp.arange(K, dtype=jnp.int32)
     sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
     ms = []
     for r in range(rounds):
-        params, state, prev, m = rf(params, state, prev, batches, sel, sizes,
-                                    jnp.int32(r))
+        st, m = rf(st, batches, sel, sizes)
         ms.append(m)
-    return params, state, ms
+    return st.params, st.angle, ms
 
 
 @pytest.mark.parametrize("method", ["fedadp", "fedavg"])
@@ -73,9 +70,9 @@ def test_fedavg_round_is_weighted_average_of_deltas():
                       method="fedavg", base_lr=0.05)
     rf = fl.make_round_fn(loss_fn, cfg)
     sizes = jnp.ones((K,))
-    new_params, *_ = rf(params, AngleState.init(K), fl.init_prev_delta(params),
-                        batches, jnp.arange(K, dtype=jnp.int32), sizes,
-                        jnp.int32(0))
+    st, _ = rf(fl.init_round_state(cfg, params), batches,
+               jnp.arange(K, dtype=jnp.int32), sizes)
+    new_params = st.params
     # manual: average the per-client local_update deltas
     deltas = [
         fl.local_update(loss_fn, params,
@@ -163,13 +160,12 @@ def test_dense_only_angle_mask_changes_stats_not_update():
                             method="fedavg")
         rf = jax.jit(fl.make_round_fn(
             lambda p, b: transformer.loss_fn(p, cfg, b), flcfg, angle_pred=pred))
-        outs[name] = rf(params, AngleState.init(K), fl.init_prev_delta(params),
-                        batches, jnp.arange(K, dtype=jnp.int32), jnp.ones((K,)),
-                        jnp.int32(0))
+        outs[name] = rf(fl.init_round_state(flcfg, params), batches,
+                        jnp.arange(K, dtype=jnp.int32), jnp.ones((K,)))
     jax.tree.map(lambda a, b: np.testing.assert_allclose(
         np.asarray(a, np.float32), np.asarray(b, np.float32)),
-        outs["all"][0], outs["dense"][0])
-    assert not np.allclose(outs["all"][3]["theta"], outs["dense"][3]["theta"])
+        outs["all"][0].params, outs["dense"][0].params)
+    assert not np.allclose(outs["all"][1]["theta"], outs["dense"][1]["theta"])
 
 
 def test_selection_subset_updates_only_selected_slots():
@@ -178,9 +174,9 @@ def test_selection_subset_updates_only_selected_slots():
     cfg = fl.FLConfig(num_clients=8, clients_per_round=K, local_steps=3,
                       method="fedadp", base_lr=0.05)
     rf = fl.make_round_fn(loss_fn, cfg)
-    state = AngleState.init(8)
     sel = jnp.asarray([1, 3, 5, 7], jnp.int32)
-    _, state, _, _ = rf(params, state, fl.init_prev_delta(params), batches,
-                        sel, jnp.ones((K,)), jnp.int32(0))
+    st, _ = rf(fl.init_round_state(cfg, params), batches, sel,
+               jnp.ones((K,)))
+    state = st.angle
     assert state.count.tolist() == [0, 1, 0, 1, 0, 1, 0, 1]
     assert np.all(np.asarray(state.smoothed[jnp.asarray([0, 2, 4, 6])]) == 0)

@@ -9,7 +9,6 @@ from repro.checkpoint import io as ckpt
 from repro.configs import registry
 from repro.core import fl
 from repro.core.server import FedServer
-from repro.core.weighting import AngleState
 from repro.data import synthetic
 from repro.models import transformer
 
@@ -65,11 +64,9 @@ def test_transformer_fl_round_parallel():
                         method="fedadp", base_lr=0.1)
     rf = jax.jit(fl.make_round_fn(
         lambda p, b: transformer.loss_fn(p, cfg, b), flcfg))
-    state = AngleState.init(K)
-    prev = fl.init_prev_delta(params)
-    p1, state, prev, m = rf(params, state, prev, batches,
-                            jnp.arange(K, dtype=jnp.int32),
-                            jnp.ones((K,)), jnp.int32(0))
+    st, m = rf(fl.init_round_state(flcfg, params), batches,
+               jnp.arange(K, dtype=jnp.int32), jnp.ones((K,)))
+    p1 = st.params
     assert jnp.isfinite(m["loss"])
     w = np.asarray(m["weights"])
     assert abs(w.sum() - 1) < 1e-5
@@ -91,13 +88,11 @@ def test_transformer_fl_loss_decreases():
                         method="fedadp", base_lr=0.05, lr_decay=1.0)
     rf = jax.jit(fl.make_round_fn(
         lambda p, b: transformer.loss_fn(p, cfg, b), flcfg))
-    state = AngleState.init(K)
-    prev = fl.init_prev_delta(params)
+    st = fl.init_round_state(flcfg, params)
     losses = []
     for r in range(8):
-        params, state, prev, m = rf(params, state, prev, batches,
-                                    jnp.arange(K, dtype=jnp.int32),
-                                    jnp.ones((K,)), jnp.int32(r))
+        st, m = rf(st, batches, jnp.arange(K, dtype=jnp.int32),
+                   jnp.ones((K,)))
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] - 0.2, losses
 

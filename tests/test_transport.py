@@ -17,7 +17,6 @@ import pytest
 
 from repro import transport
 from repro.core import fl, fl_shard_map, treemath
-from repro.core.weighting import AngleState
 from repro.kernels import ref, round_stats, weighted_agg
 from repro.transport.quantize import CHUNK
 
@@ -375,28 +374,12 @@ def _run(engine, transport_name, method="fedadp", rounds=3, k=K, mesh=None,
                       downlink_error_feedback=downlink_error_feedback,
                       base_lr=0.05)
     rf = jax.jit(fl.make_round_fn(loss_fn, cfg, mesh=mesh))
-    state = AngleState.init(k)
-    prev = fl.init_prev_delta(params)
+    st = fl.init_round_state(cfg, params)
     sel = jnp.arange(k, dtype=jnp.int32)
     sizes = jnp.asarray(10.0 * (1.0 + np.arange(k, dtype=np.float32)))
-    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
-    ef = transport.init_error_feedback(k, n) if error_feedback else None
-    dl = (transport.downlink.init_downlink_error_feedback(n)
-          if downlink_error_feedback else None)
     for r in range(rounds):
-        args = (params, state, prev, batches, sel, sizes, jnp.int32(r))
-        kw = {}
-        if error_feedback:
-            kw["ef_state"] = ef
-        if downlink_error_feedback:
-            kw["dl_state"] = dl
-        outs = rf(*args, **kw)
-        (params, state, prev, m), rest = outs[:4], list(outs[4:])
-        if error_feedback:
-            ef = rest.pop(0)
-        if downlink_error_feedback:
-            dl = rest.pop(0)
-    return params, state, m, ef, dl
+        st, m = rf(st, batches, sel, sizes)
+    return st.params, st.angle, m, st.ef, st.dl_ef
 
 
 def _assert_trees_close(a, b, atol=1e-5):
@@ -501,14 +484,12 @@ def test_int8_tree_matches_flat_with_bf16_leaves():
                           method="fedadp", engine=engine, transport="int8",
                           base_lr=0.05)
         rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
-        state = AngleState.init(K)
-        prev = fl.init_prev_delta(params)
+        st = fl.init_round_state(cfg, params)
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.asarray([10.0, 20.0, 30.0, 40.0])
         for r in range(3):
-            params, state, prev, m = rf(params, state, prev, (X, Y), sel,
-                                        sizes, jnp.int32(r))
-        outs[engine] = (params, m)
+            st, m = rf(st, (X, Y), sel, sizes)
+        outs[engine] = (st.params, m)
     for a, b in zip(jax.tree.leaves(outs["tree"][0]),
                     jax.tree.leaves(outs["flat"][0])):
         assert a.dtype == jnp.bfloat16 and b.dtype == jnp.bfloat16
@@ -580,15 +561,16 @@ def test_error_feedback_requires_quantized_transport():
         fl.make_round_fn(loss_fn, cfg)
 
 
-def test_error_feedback_requires_state_argument():
+def test_error_feedback_requires_state_buffer():
+    """A RoundState missing its EF buffer (e.g. built for a config without
+    error_feedback) must be refused, not silently run uncompensated."""
     params, loss_fn, batches = _toy_problem()
     cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
                       engine="flat", transport="int8", error_feedback=True)
     rf = fl.make_round_fn(loss_fn, cfg)
-    state = AngleState.init(K)
-    with pytest.raises(ValueError, match="ef_state"):
-        rf(params, state, fl.init_prev_delta(params), batches,
-           jnp.arange(K, dtype=jnp.int32), jnp.ones((K,)), jnp.int32(0))
+    st = fl.init_round_state(cfg, params)._replace(ef=None)
+    with pytest.raises(ValueError, match="state.ef"):
+        rf(st, batches, jnp.arange(K, dtype=jnp.int32), jnp.ones((K,)))
 
 
 # ------------------------------------------------ downlink error feedback
@@ -654,15 +636,15 @@ def test_downlink_ef_requires_quantized_downlink():
         fl.make_round_fn(loss_fn, cfg)
 
 
-def test_downlink_ef_requires_state_argument():
+def test_downlink_ef_requires_state_buffer():
     params, loss_fn, batches = _toy_problem()
     cfg = fl.FLConfig(num_clients=K, clients_per_round=K, local_steps=3,
                       engine="flat", downlink="int8",
                       downlink_error_feedback=True)
     rf = fl.make_round_fn(loss_fn, cfg)
-    with pytest.raises(ValueError, match="dl_state"):
-        rf(params, AngleState.init(K), fl.init_prev_delta(params), batches,
-           jnp.arange(K, dtype=jnp.int32), jnp.ones((K,)), jnp.int32(0))
+    st = fl.init_round_state(cfg, params)._replace(dl_ef=None)
+    with pytest.raises(ValueError, match="state.dl_ef"):
+        rf(st, batches, jnp.arange(K, dtype=jnp.int32), jnp.ones((K,)))
 
 
 # ------------------------------------------------------------- validation
