@@ -77,9 +77,9 @@ def main() -> None:
                   f"div {float(m['divergence']):.3f} "
                   f"w=[{', '.join(f'{x:.3f}' for x in w)}] "
                   f"({time.time()-t0:.1f}s)")
-    ckpt.save(args.out, {"params": state.params,
-                         "angles": {"smoothed": state.angle.smoothed,
-                                    "count": state.angle.count}})
+    # full RoundState snapshot: fl.state_from_tree(flcfg, ckpt.load(path))
+    # rebuilds the exact carry (params, angles, EF, RNG, round) to resume
+    ckpt.save(args.out, fl.state_to_tree(state))
     print("checkpoint ->", args.out)
 
 

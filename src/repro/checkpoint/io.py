@@ -1,13 +1,32 @@
-"""Pytree checkpointing: nested-dict trees <-> a single .npz file.
+"""Pytree checkpointing: nested-dict trees <-> single .npz files, plus a
+checkpoint-directory layer (atomic write-then-rename, a `latest` pointer,
+retention) for kill/resume of a running scan.
 
 Paths are flattened with '/' separators; tuples/namedtuples are converted
-to dicts by the caller (see core.server.ServerState.to_tree). Arrays are
-stored as numpy; bfloat16 round-trips via a uint16 view with a dtype tag.
+to dicts by the caller — `core.fl.state_to_tree` / `state_from_tree` are
+the RoundState codec (they replaced the pre-RoundState server-state hook
+in the PR 5 refactor). Leaf encodings that numpy cannot round-trip
+natively get a name tag:
+
+* bfloat16         -> uint16 view, name suffixed ``__bf16__``
+* typed PRNG keys  -> `jax.random.key_data` uint32 payload, name suffixed
+                      ``__key:<impl>__`` (restored via `wrap_key_data`);
+                      untagged uint32 arrays load back as plain arrays —
+                      the old-style raw-key fallback is applied by
+                      `core.fl.state_from_tree`, not here.
+* None leaves      -> zero-byte sentinel named ``<path>__none__`` (an
+                      optional RoundState field that is off must survive
+                      a round trip as None, not vanish)
+* empty dicts      -> zero-byte sentinel named ``<path>__empty__``
+
+Dict keys containing the ``/`` separator are rejected with a clear error
+instead of silently corrupting the flattened paths.
 """
 from __future__ import annotations
 
 import os
-from typing import Any
+import re
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,15 +34,41 @@ import numpy as np
 
 PyTree = Any
 _BF16_TAG = "__bf16__"
+_NONE_TAG = "__none__"
+_EMPTY_TAG = "__empty__"
+_KEY_TAG_RE = re.compile(r"__key:([A-Za-z0-9_-]+)__$")
+
+_CKPT_RE = re.compile(r"^ckpt_(\d{8})\.npz$")
+_LATEST = "latest"
+
+
+def _is_typed_key(x) -> bool:
+    dt = getattr(x, "dtype", None)
+    return dt is not None and jax.dtypes.issubdtype(dt, jax.dtypes.prng_key)
 
 
 def _flatten(tree: PyTree, prefix: str = "") -> dict:
     out = {}
     if isinstance(tree, dict):
+        if not tree and prefix:
+            out[prefix[:-1] + _EMPTY_TAG] = np.zeros((0,), np.uint8)
+            return out
         for k, v in tree.items():
+            if "/" in str(k):
+                raise ValueError(
+                    f"checkpoint path component {k!r} (under "
+                    f"{prefix!r}) contains the '/' separator — it would "
+                    "corrupt the flattened key; rename the field")
             out.update(_flatten(v, f"{prefix}{k}/"))
         return out
     key = prefix[:-1]
+    if tree is None:
+        out[key + _NONE_TAG] = np.zeros((0,), np.uint8)
+        return out
+    if _is_typed_key(tree):
+        impl = str(jax.random.key_impl(tree))
+        out[f"{key}__key:{impl}__"] = np.asarray(jax.random.key_data(tree))
+        return out
     arr = np.asarray(tree)
     if arr.dtype == jnp.bfloat16:
         out[key + _BF16_TAG] = arr.view(np.uint16)
@@ -35,23 +80,120 @@ def _flatten(tree: PyTree, prefix: str = "") -> dict:
 def _unflatten(flat: dict) -> PyTree:
     tree: dict = {}
     for key, arr in flat.items():
-        if key.endswith(_BF16_TAG):
+        value: Any
+        m = _KEY_TAG_RE.search(key)
+        if m is not None:
+            key = key[: m.start()]
+            value = jax.random.wrap_key_data(
+                jnp.asarray(arr, jnp.uint32), impl=m.group(1))
+        elif key.endswith(_NONE_TAG):
+            key = key[: -len(_NONE_TAG)]
+            value = None
+        elif key.endswith(_EMPTY_TAG):
+            key = key[: -len(_EMPTY_TAG)]
+            value = {}
+        elif key.endswith(_BF16_TAG):
             key = key[: -len(_BF16_TAG)]
-            arr = arr.view(jnp.bfloat16)
+            value = jnp.asarray(arr.view(jnp.bfloat16))
+        else:
+            value = jnp.asarray(arr)
         parts = key.split("/")
         node = tree
         for p in parts[:-1]:
             node = node.setdefault(p, {})
-        node[parts[-1]] = jnp.asarray(arr)
+        node[parts[-1]] = value
     return tree
 
 
-def save(path: str, tree: PyTree) -> None:
+def _norm_path(path: str) -> str:
+    """np.savez appends '.npz' when the name lacks it; normalize BOTH
+    save and load onto the suffixed name so `load(p)` always finds what
+    `save(p)` wrote."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def save(path: str, tree: PyTree) -> str:
+    """Atomically write `tree` to `path` (suffix-normalized to .npz).
+
+    The archive is written to a sibling temp file and `os.replace`d into
+    place, so a writer killed mid-save never leaves a torn checkpoint
+    under the final name. Returns the normalized path."""
+    path = _norm_path(path)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    host = jax.tree.map(np.asarray, tree)
-    np.savez(path, **_flatten(host))
+    flat = _flatten(tree)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return path
 
 
 def load(path: str) -> PyTree:
-    with np.load(path) as z:
+    with np.load(_norm_path(path)) as z:
         return _unflatten({k: z[k] for k in z.files})
+
+
+# ------------------------------------------------ checkpoint directories
+
+
+def checkpoint_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+
+
+def list_checkpoints(ckpt_dir: str) -> "list[tuple[int, str]]":
+    """(step, path) pairs found in `ckpt_dir`, ascending by step."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = _CKPT_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), os.path.join(ckpt_dir, name)))
+    return sorted(out)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
+                    keep: int = 3) -> str:
+    """Durable snapshot at `step`: atomic archive write, then the
+    `latest` pointer is atomically swung to it, then retention deletes
+    all but the newest `keep` archives (the pointer target is always
+    among the survivors). Returns the archive path."""
+    path = save(checkpoint_path(ckpt_dir, step), tree)
+    tmp = os.path.join(ckpt_dir, f"{_LATEST}.tmp.{os.getpid()}")
+    with open(tmp, "w") as f:
+        f.write(os.path.basename(path) + "\n")
+    os.replace(tmp, os.path.join(ckpt_dir, _LATEST))
+    if keep > 0:
+        for _, old in list_checkpoints(ckpt_dir)[:-keep]:
+            if os.path.abspath(old) != os.path.abspath(path):
+                os.remove(old)
+    return path
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    """Path of the newest complete checkpoint, or None.
+
+    Trusts the `latest` pointer when it resolves; falls back to the
+    highest-step archive on disk (a crash can kill the writer between
+    the archive rename and the pointer swing)."""
+    ptr = os.path.join(ckpt_dir, _LATEST)
+    if os.path.isfile(ptr):
+        with open(ptr) as f:
+            cand = os.path.join(ckpt_dir, f.read().strip())
+        if os.path.isfile(cand):
+            return cand
+    ckpts = list_checkpoints(ckpt_dir)
+    return ckpts[-1][1] if ckpts else None
+
+
+def load_latest(ckpt_dir: str) -> "Optional[tuple[int, PyTree]]":
+    """(step, tree) of the newest checkpoint in `ckpt_dir`, or None."""
+    path = latest_checkpoint(ckpt_dir)
+    if path is None:
+        return None
+    step = int(_CKPT_RE.match(os.path.basename(path)).group(1))
+    return step, load(path)

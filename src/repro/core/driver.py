@@ -28,7 +28,10 @@ onto the device:
   them, preserving the paper's Table-I semantics exactly: an eval fires
   after rounds where (r+1) % eval_every == 0, and rounds_to_target is
   the first such round whose accuracy reaches the target (the scan may
-  run up to one block past it; the report is exact).
+  run up to one block past it; the report is exact). `run_rounds` can
+  also snapshot the full RoundState at block boundaries
+  (`ckpt_dir=` / `ckpt_every_blocks=`) so a preempted run restores
+  bit-exactly via `fl.state_from_tree` + `checkpoint.io.load_latest`.
 """
 from __future__ import annotations
 
@@ -38,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import io as ckpt_io
 from repro.core import fl as fl_mod
 
 PyTree = Any
@@ -230,21 +234,45 @@ def make_scan_runner(step_fn: Callable, donate: Optional[bool] = None):
 
 def run_rounds(run_block: Callable, state: fl_mod.RoundState, rounds: int,
                *, eval_every: int = 1, target_acc: Optional[float] = None,
-               block: int = 8):
-    """Chunked scan over rounds with host-side early exit.
+               block: int = 8, ckpt_dir: Optional[str] = None,
+               ckpt_every_blocks: int = 1, ckpt_keep: int = 3):
+    """Chunked scan over rounds with host-side early exit and optional
+    block-boundary checkpointing.
 
     Scans `block` rounds per dispatch (one compile per distinct block
     length — at most two: the block and the final remainder); between
     blocks the host checks the in-scan eval accuracies against
     `target_acc`. Table-I semantics are preserved: rounds_to_target is
     the exact (r+1) of the first eval round at or above the target, even
-    though the device may have run to the end of that block.
+    though the device may have run to the end of that block. Rounds are
+    counted GLOBALLY from `state.round` — a state restored from a
+    checkpoint at round R resumes at R, its eval cadence stays phased on
+    the absolute round index, and rounds_to_target reports the same
+    number the uninterrupted run would.
+
+    `ckpt_dir` snapshots the FULL RoundState (fl.state_to_tree ->
+    checkpoint.io.save_checkpoint: atomic write + `latest` pointer,
+    newest `ckpt_keep` archives retained) after every
+    `ckpt_every_blocks`-th block and always at exit, so a killed run
+    loses at most `ckpt_every_blocks * block` rounds and restores
+    bit-exactly (fl.state_from_tree) at a block boundary.
 
     Returns (state, metrics, rounds_to_target, rounds_run) where metrics
-    holds per-round host arrays stacked over every round actually run.
+    holds per-round host arrays stacked over every round run THIS call
+    (`rounds_run` counts the same; rounds_to_target is absolute).
     """
+    base = int(jax.device_get(state.round))
+    saved_at = None
+
+    def checkpoint(round_now):
+        nonlocal saved_at
+        ckpt_io.save_checkpoint(ckpt_dir, round_now,
+                                fl_mod.state_to_tree(state), keep=ckpt_keep)
+        saved_at = round_now
+
     blocks = []
     done = 0
+    n_blocks = 0
     rounds_to_target = None
     while done < rounds and rounds_to_target is None:
         length = min(block, rounds - done)
@@ -254,8 +282,13 @@ def run_rounds(run_block: Callable, state: fl_mod.RoundState, rounds: int,
         if target_acc is not None and "accuracy" in ms:
             hit = np.flatnonzero(np.asarray(ms["accuracy"]) >= target_acc)
             if hit.size:
-                rounds_to_target = done + int(hit[0]) + 1
+                rounds_to_target = base + done + int(hit[0]) + 1
         done += length
+        n_blocks += 1
+        if ckpt_dir is not None and n_blocks % ckpt_every_blocks == 0:
+            checkpoint(base + done)
+    if ckpt_dir is not None and saved_at != base + done:
+        checkpoint(base + done)
     metrics = {
         k: np.concatenate([np.atleast_1d(np.asarray(m[k])) for m in blocks])
         for k in blocks[0]

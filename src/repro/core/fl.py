@@ -211,6 +211,126 @@ def init_round_state(fl: FLConfig, params: PyTree,
     )
 
 
+def state_to_tree(state: RoundState) -> dict:
+    """RoundState -> a nested dict `checkpoint.io.save` can round-trip.
+
+    Field-for-field: NamedTuples become dicts, optional fields stay None
+    (the io layer writes `__none__` sentinels so the structure survives),
+    and the typed PRNG key ships as-is (io serializes it via
+    `jax.random.key_data` + an impl tag). `state_from_tree` is the
+    inverse."""
+    return {
+        "params": state.params,
+        "angle": {"smoothed": state.angle.smoothed,
+                  "count": state.angle.count},
+        "prev_delta": state.prev_delta,
+        "ef": state.ef,
+        "dl_ef": state.dl_ef,
+        "prev_broadcast": state.prev_broadcast,
+        "rng": state.rng,
+        "round": state.round,
+    }
+
+
+def _resize_rows(a: jax.Array, k_new: int) -> jax.Array:
+    """Truncate / zero-pad axis 0 to `k_new` rows (elastic-K restore)."""
+    k_old = a.shape[0]
+    if k_new == k_old:
+        return a
+    if k_new < k_old:
+        return a[:k_new]
+    pad = jnp.zeros((k_new - k_old,) + a.shape[1:], a.dtype)
+    return jnp.concatenate([a, pad])
+
+
+def state_from_tree(cfg: FLConfig, tree: dict) -> RoundState:
+    """Rebuild a RoundState from `state_to_tree`'s dict under `cfg`.
+
+    The restored state's pytree structure is the CONFIG's — each optional
+    field (ef / dl_ef / prev_broadcast) must be present exactly when the
+    matching flag is on, and every leaf is validated (shape AND dtype)
+    against `init_round_state`'s template, so a checkpoint from a
+    different model or an incompatible config fails loudly instead of
+    mis-resuming.
+
+    Elastic-K: when `cfg.num_clients` differs from the checkpoint's, the
+    per-client state is re-sized — AngleState rows and uplink-EF rows are
+    truncated (shrink) or zero-padded (grow). New clients therefore start
+    exactly like round-0 clients: zero EF residual, unseen angle
+    (smoothed=0, count=0). Departed clients' slots are dropped. The
+    per-model vectors (dl_ef, prev_broadcast) and params are K-independent
+    and restore bit-exactly.
+
+    Old-style raw `uint32` PRNG keys (pre-typed-key checkpoints) are
+    wrapped back into a typed key via `jax.random.wrap_key_data` with the
+    default impl.
+    """
+    missing = [k for k in ("params", "angle", "prev_delta", "rng", "round")
+               if tree.get(k) is None]
+    if missing:
+        raise ValueError(
+            f"checkpoint tree lacks required RoundState fields {missing} "
+            "— was it written by fl.state_to_tree?")
+    for name, flag, want in (
+            ("ef", "error_feedback", cfg.error_feedback),
+            ("dl_ef", "downlink_error_feedback", cfg.downlink_error_feedback),
+            ("prev_broadcast", "downlink_delta", cfg.downlink_delta)):
+        have = tree.get(name) is not None
+        if want and not have:
+            raise ValueError(
+                f"cfg.{flag}=True but the checkpoint has no {name!r} — it "
+                "was written under a config with the feature off; restore "
+                "with a matching config (or re-init that buffer yourself)")
+        if have and not want:
+            raise ValueError(
+                f"checkpoint carries {name!r} but cfg.{flag}=False — "
+                "dropping a live residual would silently change the run; "
+                "restore with a matching config")
+
+    params = tree["params"]
+    rng = tree["rng"]
+    if not jax.dtypes.issubdtype(rng.dtype, jax.dtypes.prng_key):
+        rng = jax.random.wrap_key_data(jnp.asarray(rng, jnp.uint32))
+    angle = AngleState(
+        smoothed=_resize_rows(jnp.asarray(tree["angle"]["smoothed"],
+                                          jnp.float32), cfg.num_clients),
+        count=_resize_rows(jnp.asarray(tree["angle"]["count"], jnp.int32),
+                           cfg.num_clients),
+    )
+    ef = tree.get("ef")
+    if ef is not None:
+        ef = _resize_rows(ef, cfg.num_clients)
+    state = RoundState(
+        params=params, angle=angle, prev_delta=tree["prev_delta"],
+        ef=ef, dl_ef=tree.get("dl_ef"),
+        prev_broadcast=tree.get("prev_broadcast"),
+        rng=rng, round=jnp.asarray(tree["round"], jnp.int32),
+    )
+
+    # validate against the config's own allocation: same pytree structure,
+    # and shape/dtype equality on every leaf.
+    p_sds = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    template = jax.eval_shape(lambda p: init_round_state(cfg, p), p_sds)
+    got_def = jax.tree.structure(state)
+    want_def = jax.tree.structure(template)
+    if got_def != want_def:
+        raise ValueError(
+            "restored RoundState structure does not match "
+            f"init_round_state({cfg.num_clients} clients): got {got_def}, "
+            f"want {want_def}")
+    got = jax.tree_util.tree_flatten_with_path(state)[0]
+    want = jax.tree.leaves(template)
+    for (path, leaf), ref in zip(got, want):
+        name = jax.tree_util.keystr(path)
+        if leaf.shape != ref.shape or leaf.dtype != ref.dtype:
+            raise ValueError(
+                f"checkpoint leaf {name} has shape {leaf.shape} dtype "
+                f"{leaf.dtype}, but the config allocates {ref.shape} "
+                f"{ref.dtype} — wrong model or incompatible config")
+    return state
+
+
 def local_update(loss_fn: Callable, params: PyTree, batches: PyTree, lr,
                  prox_mu: float = 0.0, grad_constraint: Optional[Callable] = None):
     """tau steps of SGD on one client. batches: leaves (tau, B, ...).

@@ -18,12 +18,14 @@ Two execution modes share that step bit-for-bit:
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import io as ckpt_io
 from repro.core import driver as driver_mod
 from repro.core import fl as fl_mod
 from repro.data.synthetic import Dataset
@@ -143,17 +145,26 @@ class FedServer:
         return hist
 
     def run_scanned(self, rounds: int, target_acc: Optional[float] = None,
-                    eval_every: int = 1, block: int = 8) -> History:
+                    eval_every: int = 1, block: int = 8,
+                    ckpt_dir: Optional[str] = None,
+                    ckpt_every_blocks: int = 1,
+                    ckpt_keep: int = 3) -> History:
         """The same run as chunked `lax.scan` blocks (driver.run_rounds):
         `block` rounds per dispatch, host early-exit between blocks.
         Matches `run()`'s trajectory to float tolerance (the step function
         is shared; only the dispatch granularity differs) and its History
-        semantics exactly — per-round entries stop at rounds_to_target."""
+        semantics exactly — per-round entries stop at rounds_to_target.
+        `ckpt_dir` snapshots the full RoundState at block boundaries
+        (see `restore` for the other half of a kill/resume);
+        rounds_to_target stays the ABSOLUTE round index when resuming a
+        mid-run state."""
+        start = int(self.state.round)
         self.state, ms, rtt, ran = driver_mod.run_rounds(
             self._run_block, self.state, rounds, eval_every=eval_every,
-            target_acc=target_acc, block=block)
+            target_acc=target_acc, block=block, ckpt_dir=ckpt_dir,
+            ckpt_every_blocks=ckpt_every_blocks, ckpt_keep=ckpt_keep)
         hist = History([], [], [], rtt, 0.0, [], [])
-        stop = rtt if rtt is not None else ran
+        stop = rtt - start if rtt is not None else ran
         for r in range(stop):
             self._append(hist, {k: v[r] for k, v in ms.items()})
             acc = float(ms["accuracy"][r])
@@ -161,6 +172,41 @@ class FedServer:
                 hist.accuracy.append(acc)
         hist.final_accuracy = hist.accuracy[-1] if hist.accuracy else 0.0
         return hist
+
+    def save_checkpoint(self, ckpt_dir: str, keep: int = 3) -> str:
+        """Snapshot the current RoundState into `ckpt_dir` (atomic write,
+        `latest` pointer), keyed by the absolute round index."""
+        return ckpt_io.save_checkpoint(
+            ckpt_dir, self.round, fl_mod.state_to_tree(self.state),
+            keep=keep)
+
+    def restore(self, source: str) -> int:
+        """Resume from a checkpoint: `source` is a checkpoint directory
+        (the `latest` pointer is followed) or a single .npz path. The
+        restored RoundState is validated against — and elastically
+        re-sized to — THIS server's config (`fl.state_from_tree`), so a
+        fleet that grew or shrank since the snapshot restores with new
+        clients at zero EF residual / unseen angle. Returns the absolute
+        round index training will resume from."""
+        if os.path.isdir(source):
+            loaded = ckpt_io.load_latest(source)
+            if loaded is None:
+                raise FileNotFoundError(
+                    f"no checkpoint found in directory {source!r}")
+            _, tree = loaded
+        else:
+            tree = ckpt_io.load(source)
+        state = fl_mod.state_from_tree(self.fl, tree)
+        # the codec validates the state against its OWN params; the server
+        # additionally pins them to this model's allocation.
+        cur = jax.tree.map(lambda a: (a.shape, a.dtype), self.state.params)
+        new = jax.tree.map(lambda a: (a.shape, a.dtype), state.params)
+        if cur != new:
+            raise ValueError(
+                "checkpoint params do not match this server's model "
+                f"(got {new}, want {cur})")
+        self.state = state
+        return self.round
 
     @staticmethod
     def _append(hist: History, m: dict) -> None:

@@ -8,6 +8,11 @@ reduced (smoke) arch to execute end-to-end.
       --smoke --rounds 5
   # pod usage (unchanged code path):
   python -m repro.launch.train --arch gemma-2b --rounds 1000 [--multi-pod]
+  # preemptible runs: --ckpt DIR [--ckpt-every N] snapshots the FULL
+  # RoundState (params, angles, EF, RNG, round); --resume continues
+  # bit-exactly from the latest snapshot:
+  python -m repro.launch.train --arch gemma-2b --rounds 1000 \
+      --ckpt /ckpts/run1 --ckpt-every 50 --resume
 """
 from __future__ import annotations
 
@@ -29,10 +34,21 @@ def main() -> None:
     ap.add_argument("--global-batch", type=int, default=None)
     ap.add_argument("--tau", type=int, default=1)
     ap.add_argument("--stale", action="store_true")
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint DIRECTORY: the full RoundState is "
+                         "snapshotted there (atomic, `latest` pointer)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="also checkpoint every N rounds (0: only at end)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt; "
+                         "training continues bit-exactly at the saved "
+                         "round (--rounds is the TOTAL round budget)")
     args = ap.parse_args()
+    if args.resume and not args.ckpt:
+        ap.error("--resume needs --ckpt (the directory to resume from)")
 
     import dataclasses
+    import hashlib
 
     import jax
     import jax.numpy as jnp
@@ -64,18 +80,38 @@ def main() -> None:
     print(f"arch={cfg.name} mode={meta['fl_mode']} K={K} B={B} tau={tau} "
           f"T={shape.seq_len} mesh={dict(mesh.shape)}")
 
+    from repro.checkpoint import io as ckpt_io
+
     with mesh:
         step = jax.jit(fn, in_shardings=in_shard, out_shardings=out_shard)
         # the exact config build_train_step lowered with — RoundState's
         # pytree structure is a function of it, so a hand-rebuilt copy
         # could silently diverge from the compiled signature
         flcfg = fl_mod.FLConfig(**meta["flcfg"])
-        params = transformer.init_params(jax.random.key(0), cfg)
-        state = fl_mod.init_round_state(flcfg, params)
+        start = 0
+        if args.resume:
+            loaded = ckpt_io.load_latest(args.ckpt)
+            if loaded is None:
+                raise SystemExit(f"--resume: no checkpoint in {args.ckpt}")
+            step_no, tree = loaded
+            state = fl_mod.state_from_tree(flcfg, tree)
+            start = int(state.round)
+            print(f"resumed {args.ckpt} @ round {start} (ckpt_{step_no:08d})")
+        else:
+            params = transformer.init_params(jax.random.key(0), cfg)
+            state = fl_mod.init_round_state(flcfg, params)
         state = jax.device_put(state, in_shard[0])
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.ones((K,))
-        for r in range(args.rounds):
+
+        def checkpoint(round_no: int) -> None:
+            ckpt_io.save_checkpoint(args.ckpt, round_no,
+                                    fl_mod.state_to_tree(state))
+            print(f"checkpoint -> {args.ckpt} @ round {round_no}")
+
+        for r in range(start, args.rounds):
+            # round-seeded synthetic batches: the stream a resumed run
+            # sees at round r is identical to the uninterrupted run's
             toks = synthetic.lm_token_batches(
                 seed=r, num_clients=K, batch=tau * B, seq=shape.seq_len,
                 vocab=cfg.vocab_size,
@@ -88,11 +124,15 @@ def main() -> None:
             state, m = step(state, batch, sel, sizes)
             print(f"round {r:4d} loss {float(m['loss']):.4f} "
                   f"div {float(m['divergence']):.3f} ({time.time()-t0:.1f}s)")
+            if (args.ckpt and args.ckpt_every
+                    and (r + 1) % args.ckpt_every == 0):
+                checkpoint(r + 1)
         if args.ckpt:
-            from repro.checkpoint import io as ckpt_io
-
-            ckpt_io.save(args.ckpt, {"params": state.params})
-            print("checkpoint ->", args.ckpt)
+            checkpoint(int(jax.device_get(state.round)))
+        h = hashlib.sha256()
+        for leaf in jax.tree.leaves(jax.device_get(state.params)):
+            h.update(np.ascontiguousarray(leaf).tobytes())
+        print("params_sha256", h.hexdigest())
 
 
 if __name__ == "__main__":
