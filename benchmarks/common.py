@@ -3,10 +3,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import fl
-from repro.core.server import FedServer
+import repro
 from repro.data import synthetic
 
 _TASK_CACHE: dict = {}
@@ -50,41 +47,52 @@ def run_fl(
     mesh=None,
     scan: bool = False,
     scan_block: int = 8,
+    aggregation: str = "sync",
+    buffer_m: int = 0,
+    staleness_beta: float = 0.3,
+    straggle_prob: float = 0.0,
+    straggle_max: int = 1,
+    dropout_prob: float = 0.0,
+    arrival_fn=None,
 ):
     """Returns (history, seconds_per_round).
 
     `scan=True` drives the run through the scanned device-resident driver
-    (`FedServer.run_scanned`, `scan_block` rounds per dispatch) instead of
+    (`run(mode="scanned")`, `scan_block` rounds per dispatch) instead of
     the stepwise per-round loop; both share the same compiled step, so
     the trajectory is identical and only the dispatch granularity (and
-    wall clock) differs.
+    wall clock) differs. `aggregation="buffered"` plus the
+    buffer_m/staleness/straggle/dropout knobs (or an explicit
+    `arrival_fn` schedule) run the buffered-async server instead of the
+    lockstep round — rounds then count server ticks.
     """
     train, test = get_task()
     nodes = synthetic.make_federated(train, spec, samples_per_node=samples,
                                      seed=seed + 1)
     n = len(spec)
-    cfg = fl.FLConfig(
+    cfg = repro.FLConfig(
         num_clients=n, clients_per_round=n, local_steps=samples // batch_size,
         method=method, alpha=alpha, base_lr=base_lr,
         engine=engine, transport=transport, downlink=downlink,
         downlink_delta=downlink_delta, group_size=group_size,
+        aggregation=aggregation, buffer_m=buffer_m,
+        staleness_beta=staleness_beta, straggle_prob=straggle_prob,
+        straggle_max=straggle_max, dropout_prob=dropout_prob,
     )
-    server = FedServer(model, cfg, nodes, test, batch_size=batch_size,
-                       seed=seed, mesh=mesh)
+    server = repro.FedServer(model, cfg, nodes, test, batch_size=batch_size,
+                             seed=seed, mesh=mesh, arrival_fn=arrival_fn)
     # warm the jit cache on the chosen dispatch path with throwaway
     # rounds, then reset so the timed trajectory still starts at round 0
     if scan:
-        server.run_scanned(min(rounds, scan_block), eval_every=eval_every,
-                           block=scan_block)
+        server.run(min(rounds, scan_block), eval_every=eval_every,
+                   mode="scanned", block=scan_block)
     else:
         server.step(eval_every=eval_every)
     server.reset()
     t0 = time.time()
-    if scan:
-        hist = server.run_scanned(rounds, target_acc=target,
-                                  eval_every=eval_every, block=scan_block)
-    else:
-        hist = server.run(rounds, target_acc=target, eval_every=eval_every)
+    hist = server.run(rounds, target_acc=target, eval_every=eval_every,
+                      mode="scanned" if scan else "stepwise",
+                      block=scan_block)
     dt = time.time() - t0
     done = len(hist.loss) or 1
     return hist, dt / done

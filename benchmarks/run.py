@@ -96,8 +96,7 @@ def fig7_divergence(full: bool = False) -> None:
 def method_ablation(full: bool = False) -> None:
     """Beyond-paper ablation: FedAvg vs FedProx (mu=0.1) vs FedAdp on the
     5 IID + 5 one-class split (rounds to 85%)."""
-    from repro.core import fl as fl_mod
-    from repro.core.server import FedServer
+    import repro
     from repro.data import synthetic
 
     train, test = get_task()
@@ -106,7 +105,7 @@ def method_ablation(full: bool = False) -> None:
     )
     rounds = 120 if full else 60
     for method, mu in (("fedavg", 0.0), ("fedprox", 0.1), ("fedadp", 0.0)):
-        cfg = fl_mod.FLConfig(
+        cfg = repro.FLConfig(
             num_clients=10,
             clients_per_round=10,
             local_steps=12,
@@ -114,7 +113,7 @@ def method_ablation(full: bool = False) -> None:
             prox_mu=mu,
             base_lr=0.05,
         )
-        server = FedServer("mlr", cfg, nodes, test, batch_size=50, seed=0)
+        server = repro.FedServer("mlr", cfg, nodes, test, batch_size=50, seed=0)
         import time as _t
 
         t0 = _t.time()
@@ -201,7 +200,7 @@ def engine_ab(full: bool = False, tiny: bool = False) -> None:
     import jax
     import jax.numpy as jnp
 
-    from repro.core import fl as fl_mod
+    import repro
 
     ks = (4, 8) if tiny else (8, 32, 64, 128)
     d = 1 << 10 if tiny else (1 << 16 if full else 1 << 14)
@@ -228,7 +227,7 @@ def engine_ab(full: bool = False, tiny: bool = False) -> None:
         for engine in engines:
             if engine == "flat_sharded" and K % jax.device_count():
                 continue
-            cfg = fl_mod.FLConfig(
+            cfg = repro.FLConfig(
                 num_clients=K,
                 clients_per_round=K,
                 local_steps=tau,
@@ -236,8 +235,8 @@ def engine_ab(full: bool = False, tiny: bool = False) -> None:
                 engine=engine,
                 base_lr=0.05,
             )
-            rf = jax.jit(fl_mod.make_round_fn(loss_fn, cfg, mesh=mesh))
-            args = (fl_mod.init_round_state(cfg, params), (X, Y), sel, sizes)
+            rf = jax.jit(repro.make_round_fn(loss_fn, cfg, mesh=mesh))
+            args = (repro.init_round_state(cfg, params), (X, Y), sel, sizes)
             jax.block_until_ready(rf(*args))  # compile
             t0 = time.time()
             reps = 5
@@ -287,7 +286,7 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
     import jax.numpy as jnp
 
     from repro import transport as transport_mod
-    from repro.core import fl as fl_mod
+    import repro
 
     ks = (4, 8) if tiny else (8, 32, 64, 128)
     d = 1 << 10 if tiny else (1 << 16 if full else 1 << 14)
@@ -301,7 +300,7 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
         return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
 
     def time_round(K, data, tr, dl):
-        cfg = fl_mod.FLConfig(
+        cfg = repro.FLConfig(
             num_clients=K,
             clients_per_round=K,
             local_steps=tau,
@@ -311,10 +310,10 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
             downlink=dl,
             base_lr=0.05,
         )
-        rf = jax.jit(fl_mod.make_round_fn(loss_fn, cfg))
+        rf = jax.jit(repro.make_round_fn(loss_fn, cfg))
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.ones((K,), jnp.float32)
-        args = (fl_mod.init_round_state(cfg, params), data, sel, sizes)
+        args = (repro.init_round_state(cfg, params), data, sel, sizes)
         jax.block_until_ready(rf(*args))  # compile
         t0 = time.time()
         reps = 5
@@ -445,15 +444,14 @@ def driver_ab(full: bool = False, tiny: bool = False) -> None:
     python-loop path dispatches it once per round and `device_get`s the
     metrics each time (the pre-driver FedServer cadence), while the
     scanned path folds all R rounds into one `lax.scan` dispatch
-    (`FedServer.run_scanned` with block=R). The gap is therefore pure
+    (`FedServer.run(mode="scanned")` with block=R). The gap is therefore pure
     dispatch/sync overhead — exactly what the device-resident driver
     exists to remove. Results land in BENCH_driver.json for the CI
     bench-smoke artifact; acceptance is scanned <= python-loop at every K.
     """
     import json
 
-    from repro.core import fl as fl_mod
-    from repro.core.server import FedServer
+    import repro
     from repro.data import synthetic
 
     ks = (4, 8) if tiny else (8, 32, 64, 128)
@@ -467,21 +465,21 @@ def driver_ab(full: bool = False, tiny: bool = False) -> None:
         nodes = synthetic.make_federated(
             train, [("iid", None)] * K, samples_per_node=samples, seed=1
         )
-        cfg = fl_mod.FLConfig(
+        cfg = repro.FLConfig(
             num_clients=K,
             clients_per_round=K,
             local_steps=samples // batch,
             method="fedadp",
             base_lr=0.05,
         )
-        server = FedServer("mlr", cfg, nodes, test, batch_size=batch, seed=0)
+        server = repro.FedServer("mlr", cfg, nodes, test, batch_size=batch, seed=0)
 
         def loop_path():
             for _ in range(R):
                 server.step()
 
         def scan_path():
-            server.run_scanned(R, eval_every=0, block=R)
+            server.run(R, eval_every=0, mode="scanned", block=R)
 
         server.step()  # compile the stepwise dispatch
         scan_path()  # compile the scan block

@@ -15,8 +15,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import fl
-from repro.core.server import FedServer
+import repro
 from repro.data import synthetic
 
 SETTINGS = {
@@ -49,10 +48,10 @@ def main() -> None:
                                      samples_per_node=600, seed=1)
     out = {}
     for method in ("fedavg", "fedadp"):
-        cfg = fl.FLConfig(num_clients=10, clients_per_round=10,
+        cfg = repro.FLConfig(num_clients=10, clients_per_round=10,
                           local_steps=600 // batch, method=method,
                           alpha=args.alpha, base_lr=lr)
-        server = FedServer(args.model, cfg, nodes, test, batch_size=batch, seed=0)
+        server = repro.FedServer(args.model, cfg, nodes, test, batch_size=batch, seed=0)
         hist = server.run(args.rounds, target_acc=args.target, eval_every=2,
                           verbose=True)
         out[method] = {

@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.checkpoint import io as ckpt
 from repro.configs import registry
-from repro.core import fl
 from repro.data import synthetic
 from repro.models import transformer
 from repro.models.config import ModelConfig
@@ -55,12 +55,12 @@ def main() -> None:
     print(f"model {cfg.name}: {n/1e6:.1f}M params; "
           f"K={args.clients} tau={args.tau} B={args.batch} T={args.seq}")
 
-    flcfg = fl.FLConfig(num_clients=args.clients, clients_per_round=args.clients,
+    flcfg = repro.FLConfig(num_clients=args.clients, clients_per_round=args.clients,
                         local_steps=args.tau, method=args.method,
                         base_lr=args.lr, lr_decay=0.999)
-    round_fn = jax.jit(fl.make_round_fn(
+    round_fn = jax.jit(repro.make_round_fn(
         lambda p, b: transformer.loss_fn(p, cfg, b), flcfg))
-    state = fl.init_round_state(flcfg, params)
+    state = repro.init_round_state(flcfg, params)
     sel = jnp.arange(args.clients, dtype=jnp.int32)
     sizes = jnp.ones((args.clients,))
 
@@ -77,9 +77,9 @@ def main() -> None:
                   f"div {float(m['divergence']):.3f} "
                   f"w=[{', '.join(f'{x:.3f}' for x in w)}] "
                   f"({time.time()-t0:.1f}s)")
-    # full RoundState snapshot: fl.state_from_tree(flcfg, ckpt.load(path))
+    # full RoundState snapshot: repro.state_from_tree(flcfg, ckpt.load(path))
     # rebuilds the exact carry (params, angles, EF, RNG, round) to resume
-    ckpt.save(args.out, fl.state_to_tree(state))
+    ckpt.save(args.out, repro.state_to_tree(state))
     print("checkpoint ->", args.out)
 
 

@@ -10,8 +10,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import fl
-from repro.core.server import FedServer
+import repro
 from repro.data import synthetic
 
 
@@ -25,9 +24,9 @@ def main() -> None:
     target = 0.85
     results = {}
     for method in ("fedavg", "fedadp"):
-        cfg = fl.FLConfig(num_clients=10, clients_per_round=10,
+        cfg = repro.FLConfig(num_clients=10, clients_per_round=10,
                           local_steps=12, method=method, base_lr=0.05)
-        server = FedServer("mlr", cfg, nodes, test, batch_size=50, seed=0)
+        server = repro.FedServer("mlr", cfg, nodes, test, batch_size=50, seed=0)
         hist = server.run(rounds=60, target_acc=target, eval_every=2)
         r = hist.rounds_to_target
         results[method] = r

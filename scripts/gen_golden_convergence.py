@@ -20,8 +20,11 @@ import json
 import os
 import sys
 
+import numpy as np
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+import repro  # noqa: E402
 from benchmarks.common import node_spec, run_fl  # noqa: E402
 from repro import transport  # noqa: E402
 
@@ -39,6 +42,42 @@ TASK = {
     "group_size": 512,
     "eval_every": 1,
 }
+
+# The buffered-async sibling claim: same task, aggregation="buffered",
+# under a FIXED straggler/dropout arrival schedule (deterministic, so the
+# golden is exact): two reports delayed one tick, one lost in transit,
+# flush at buffer_m=8 of 10. Acceptance: buffered fedadp stays within
+# 1.1x of the sync golden's rounds on both the uncompressed and the
+# fully-compressed wire. "rounds" here count server TICKS.
+TASK_BUFFERED = {
+    **TASK,
+    "aggregation": "buffered",
+    "buffer_m": 8,
+    "staleness_beta": 0.3,
+    "schedule": {
+        "ticks": 8,          # rows in the (T, K) schedule; tail reuses row T-1
+        "num_clients": 10,
+        "delay": 1,          # straggler delay, in server ticks
+        "stragglers": [[0, 3], [2, 7]],  # (tick, client) pairs arriving late
+        "drops": [[1, 5]],               # (tick, client) reports lost
+    },
+}
+
+# buffered wires: the reference and the fully-compressed pair
+BUFFERED_WIRES = [("f32", "f32"), ("int4", "int8")]
+
+
+def buffered_arrival_fn(task=TASK_BUFFERED):
+    """The fixed schedule of TASK_BUFFERED as an arrival_fn (the test
+    rebuilds the same function from the committed JSON)."""
+    s = task["schedule"]
+    delays = np.zeros((s["ticks"], s["num_clients"]), np.int32)
+    drops = np.zeros((s["ticks"], s["num_clients"]), bool)
+    for t, k in s["stragglers"]:
+        delays[t, k] = s["delay"]
+    for t, k in s["drops"]:
+        drops[t, k] = True
+    return repro.fixed_arrival_schedule(delays, drops)
 
 
 def run_matrix():
@@ -60,6 +99,25 @@ def run_matrix():
     return entries
 
 
+def run_buffered():
+    entries = {}
+    spec = node_spec(5, 5, 1)
+    t = TASK_BUFFERED
+    for uplink, downlink in BUFFERED_WIRES:
+        hist, _ = run_fl(
+            "fedadp", spec, rounds=t["max_rounds"], target=t["target"],
+            engine=t["engine"], transport=uplink, downlink=downlink,
+            group_size=t["group_size"], seed=t["seed"],
+            eval_every=t["eval_every"], aggregation="buffered",
+            buffer_m=t["buffer_m"], staleness_beta=t["staleness_beta"],
+            arrival_fn=buffered_arrival_fn(t),
+        )
+        key = f"fedadp/{uplink}/{downlink}"
+        entries[key] = hist.rounds_to_target
+        print(f"buffered {key}: {hist.rounds_to_target}", flush=True)
+    return entries
+
+
 def main():
     import jax
 
@@ -69,6 +127,10 @@ def main():
         "metric": "rounds_to_target_accuracy",
         "generated_with_jax": jax.__version__,
         "entries": entries,
+        "buffered": {
+            "task": TASK_BUFFERED,
+            "entries": run_buffered(),
+        },
     }
     os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
     with open(GOLDEN_PATH, "w") as f:

@@ -1,0 +1,135 @@
+"""Device-resident report buffer for the buffered-async aggregation server.
+
+The synchronous round is lockstep: every selected node reports before the
+server re-weights by gradient angle. `FLConfig(aggregation="buffered")`
+replaces that with a FedBuff-style admission/flush state machine that
+stays entirely on device so the scanned driver can carry it through
+`lax.scan`:
+
+* The server keeps K concurrency slots — rows of the existing (K, N)
+  uplink buffer plus per-row bookkeeping (`ReportBuffer`, folded into
+  `fl.RoundState.buf`). A slot holds at most one in-flight report.
+* Every server tick, FREE slots admit a fresh client: the client pulls
+  the current broadcast, trains, and its (dequantized) wire delta is
+  written into the slot together with a simulated arrival delay drawn
+  from the device RNG (`draw_arrivals`) or injected via an explicit
+  schedule (`core.server.fixed_arrival_schedule`). A dropout report is
+  never admitted — the upload is lost in transit and the slot stays
+  free, so liveness never depends on timeouts.
+* A report LANDS when its delay expires. The server flushes whenever at
+  least `buffer_m` of the in-flight reports have landed: the landed rows
+  are aggregated with the staleness-discounted FedAdp weights
+  (`weighting.buffered_fedadp_weights`) and applied to the master
+  params; non-landed rows stay buffered and their `age` — the number of
+  model versions elapsed since their client pulled params — increments.
+
+Everything is mask-based (no data-dependent shapes), so one compiled
+step serves every tick and the whole machine composes with `lax.scan`,
+checkpointing (`ReportBuffer` round-trips through the RoundState codec),
+and all three parallel engines. With `buffer_m == K` and no
+stragglers/dropouts every tick admits, lands, and flushes the full
+cohort at age 0 — bit-for-bit the synchronous round.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReportBuffer(NamedTuple):
+    """Per-slot state of the buffered server's in-flight reports.
+
+    One row per concurrency slot (K = clients_per_round rows). All
+    fields are plain arrays so the buffer rides inside `fl.RoundState`
+    (scan carry, checkpoint codec) without special casing.
+    """
+
+    data: jax.Array  # (K, N) f32 — dequantized report deltas
+    slot: jax.Array  # (K,) i32 — population slot of the row's client
+    sizes: jax.Array  # (K,) f32 — report data sizes D_i
+    age: jax.Array  # (K,) i32 — staleness: model versions since pull
+    wait: jax.Array  # (K,) i32 — ticks until the report lands (0 = landed)
+    free: jax.Array  # (K,) bool — row is empty (admits next candidate)
+
+
+def init_report_buffer(k: int, n: int) -> ReportBuffer:
+    """An empty K-slot buffer over N-wide report rows (all rows free)."""
+    return ReportBuffer(
+        data=jnp.zeros((k, n), jnp.float32),
+        slot=jnp.zeros((k,), jnp.int32),
+        sizes=jnp.ones((k,), jnp.float32),
+        age=jnp.zeros((k,), jnp.int32),
+        wait=jnp.zeros((k,), jnp.int32),
+        free=jnp.ones((k,), bool),
+    )
+
+
+def population_busy(buf: ReportBuffer, num_clients: int) -> jax.Array:
+    """(num_clients,) bool — clients with a report in flight.
+
+    A busy client must not be re-selected (its next report would collide
+    with the buffered one in the Eq. 9 scatter). Free rows carry stale
+    slot ids, so they are routed out of bounds and dropped.
+    """
+    idx = jnp.where(buf.free, num_clients, buf.slot)
+    return (jnp.zeros((num_clients,), bool)
+            .at[idx].set(True, mode="drop"))
+
+
+def draw_arrivals(key, k: int, straggle_prob: float, straggle_max: int,
+                  dropout_prob: float):
+    """Simulated arrival draw for this tick's K candidate reports.
+
+    Returns (delay, drop): delay is 0 for on-time reports and uniform in
+    {1..straggle_max} for stragglers; drop marks reports lost in transit
+    (never admitted). Deterministic in `key` — a fixed seed IS a fixed
+    straggler/dropout schedule.
+    """
+    kd, ks, ku = jax.random.split(key, 3)
+    drop = jax.random.bernoulli(kd, dropout_prob, (k,))
+    straggle = jax.random.bernoulli(ks, straggle_prob, (k,))
+    delay = jax.random.randint(ku, (k,), 1, max(straggle_max, 1) + 1)
+    return jnp.where(straggle, delay, 0).astype(jnp.int32), drop
+
+
+def admit(buf: ReportBuffer, admit_mask: jax.Array, rows: jax.Array,
+          sel_idx: jax.Array, data_sizes: jax.Array,
+          delay: jax.Array) -> ReportBuffer:
+    """Merge this tick's admitted candidate reports into their slots.
+
+    `admit_mask` is (K,) bool — free rows taking a non-busy, non-dropped
+    candidate. Occupied rows keep their in-flight report untouched.
+    """
+    take = admit_mask[:, None]
+    return ReportBuffer(
+        data=jnp.where(take, rows, buf.data),
+        slot=jnp.where(admit_mask, sel_idx.astype(jnp.int32), buf.slot),
+        sizes=jnp.where(admit_mask, data_sizes.astype(jnp.float32),
+                        buf.sizes),
+        age=jnp.where(admit_mask, 0, buf.age),
+        wait=jnp.where(admit_mask, delay, buf.wait),
+        free=buf.free & ~admit_mask,
+    )
+
+
+def landed_mask(buf: ReportBuffer) -> jax.Array:
+    """(K,) bool — occupied rows whose report has arrived at the server."""
+    return ~buf.free & (buf.wait <= 0)
+
+
+def advance(buf: ReportBuffer, landed: jax.Array,
+            do_flush: jax.Array) -> ReportBuffer:
+    """End-of-tick bookkeeping after the (possible) flush.
+
+    Flushed rows (landed, when `do_flush`) free up; surviving occupied
+    rows age by one model version iff a flush advanced the params; and
+    in-flight waits tick down toward arrival.
+    """
+    new_free = buf.free | (landed & do_flush)
+    return buf._replace(
+        free=new_free,
+        age=jnp.where(~new_free & do_flush, buf.age + 1, buf.age),
+        wait=jnp.where(new_free, 0, jnp.maximum(buf.wait - 1, 0)),
+    )

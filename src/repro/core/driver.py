@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import io as ckpt_io
+from repro.core import buffer as buffer_mod
 from repro.core import fl as fl_mod
 
 PyTree = Any
@@ -112,6 +113,26 @@ def select_clients(key, num_clients: int, k: int) -> jax.Array:
     return jax.random.permutation(key, num_clients)[:k].astype(jnp.int32)
 
 
+def select_clients_avoiding(key, num_clients: int, k: int,
+                            busy: jax.Array) -> jax.Array:
+    """Subset selection that prefers clients with no report in flight.
+
+    The buffered server must not re-select a busy client (its new report
+    would collide with the buffered one in the Eq. 9 scatter), so busy
+    clients sort strictly after every free one: uniform keys in [0, 1)
+    get +1 where busy, and the k smallest win. Only when fewer than k
+    clients are free do busy ones appear among the candidates — and the
+    round's admission mask (`core.buffer`) filters those out. Full
+    participation stays the deterministic identity (`select_clients`):
+    every client is a candidate every tick; admission masks the busy ones.
+    """
+    if k >= num_clients:
+        return jnp.arange(num_clients, dtype=jnp.int32)
+    u = jax.random.uniform(key, (num_clients,))
+    u = jnp.where(busy, u + 1.0, u)
+    return jnp.argsort(u)[:k].astype(jnp.int32)
+
+
 def epoch_batches(key, data: ClientData, sel: jax.Array):
     """One epoch of shuffled minibatches per selected client, on device.
 
@@ -174,7 +195,7 @@ def make_eval_fn(apply_fn: Callable, test_x, test_y,
 def make_step_fn(loss_fn: Callable, fl: fl_mod.FLConfig, data: ClientData,
                  *, eval_fn: Optional[Callable] = None,
                  angle_pred: Optional[Callable] = None,
-                 mesh=None) -> Callable:
+                 mesh=None, arrival_fn: Optional[Callable] = None) -> Callable:
     """One fully device-resident federated round.
 
     step(state, eval_every) -> (state, metrics): split the state's RNG,
@@ -188,13 +209,26 @@ def make_step_fn(loss_fn: Callable, fl: fl_mod.FLConfig, data: ClientData,
 
     The SAME function is the stepwise server's jitted step and the
     scanned driver's scan body — equivalence by construction.
+
+    With `fl.aggregation == "buffered"` each step is one server TICK
+    (see `fl._make_buffered_round`): subset selection avoids clients
+    whose report is still in flight (`select_clients_avoiding` over
+    `state.buf`), and `arrival_fn` (an explicit per-tick delay/dropout
+    schedule, e.g. `core.server.fixed_arrival_schedule`) flows through
+    to the round builder. Both are inert for sync configs.
     """
+    buffered = fl.aggregation == "buffered"
     round_fn = fl_mod.make_round_fn(loss_fn, fl, angle_pred=angle_pred,
-                                    mesh=mesh)
+                                    mesh=mesh, arrival_fn=arrival_fn)
 
     def step(state: fl_mod.RoundState, eval_every):
         rng, k_sel, k_bat = jax.random.split(state.rng, 3)
-        sel = select_clients(k_sel, fl.num_clients, fl.clients_per_round)
+        if buffered and fl.clients_per_round < fl.num_clients:
+            busy = buffer_mod.population_busy(state.buf, fl.num_clients)
+            sel = select_clients_avoiding(k_sel, fl.num_clients,
+                                          fl.clients_per_round, busy)
+        else:
+            sel = select_clients(k_sel, fl.num_clients, fl.clients_per_round)
         batches = epoch_batches(k_bat, data, sel)
         sizes = data.sizes[sel].astype(jnp.float32)
         state, metrics = round_fn(state._replace(rng=rng), batches, sel,

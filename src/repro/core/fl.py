@@ -49,6 +49,7 @@ import jax.numpy as jnp
 
 from repro import transport as transport_mod
 from repro.core import fl_shard_map, treemath, weighting
+from repro.core import buffer as buffer_mod
 from repro.core.weighting import AngleState
 from repro.kernels import round_stats as round_stats_mod
 from repro.kernels import weighted_agg as weighted_agg_mod
@@ -151,6 +152,149 @@ class FLConfig:
     angle_filter: str = "all"  # all | dense_only
     # fedprox (Li et al. 2018) baseline: mu/2 ||w - w_global||^2 proximal term
     prox_mu: float = 0.0
+    # Server aggregation discipline:
+    #   "sync"     — the paper's lockstep round: every selected node
+    #                reports before the server re-weights by angle.
+    #   "buffered" — FedBuff-style buffered-async server (core.buffer):
+    #                reports are admitted continuously into a K-slot
+    #                device-resident buffer (`RoundState.buf`) with
+    #                simulated arrival delays/dropouts, and the server
+    #                flushes whenever `buffer_m` of the in-flight cohort
+    #                have landed, folding a staleness discount into the
+    #                FedAdp Gompertz weight (late low-contribution nodes
+    #                are doubly suppressed). Requires mode="parallel".
+    #                With buffer_m == K and no stragglers/dropouts it
+    #                reproduces the sync round bit-for-bit.
+    aggregation: str = "sync"  # sync | buffered
+    # Buffered flush threshold M: aggregate when >= buffer_m reports of
+    # the in-flight cohort have landed. 0 (default) means M = K =
+    # clients_per_round — flush only when the whole cohort landed.
+    buffer_m: int = 0
+    # Staleness decay rate: a report applied `age` model versions after
+    # its client pulled params is discounted by exp(-staleness_beta*age)
+    # inside the aggregation weights (weighting.staleness_discount).
+    staleness_beta: float = 0.3
+    # Simulated arrival-time injection (buffered mode): each admitted
+    # report straggles with probability `straggle_prob` (arrival delayed
+    # uniformly in {1..straggle_max} server ticks) and is dropped in
+    # transit with probability `dropout_prob` (never arrives; the slot
+    # re-admits a fresh client next tick). Drawn from the device RNG —
+    # a fixed seed is a fixed schedule; `make_round_fn(arrival_fn=)`
+    # overrides the draw entirely (core.server.fixed_arrival_schedule).
+    straggle_prob: float = 0.0
+    straggle_max: int = 1
+    dropout_prob: float = 0.0
+
+    def validate(self) -> "FLConfig":
+        """Check the config's cross-field invariants in one place.
+
+        Raises ValueError naming the offending field. Called by both
+        `make_round_fn` and `init_round_state`, so an invalid config
+        fails before any buffer is allocated or a round is traced.
+        Returns self so it chains: `cfg = FLConfig(...).validate()`.
+        """
+        if self.mode not in ("parallel", "sequential"):
+            raise ValueError(
+                f"unknown mode {self.mode!r} (expected 'parallel' or "
+                "'sequential')")
+        if self.method not in ("fedadp", "fedavg", "fedprox"):
+            raise ValueError(
+                f"unknown method {self.method!r} (expected 'fedadp', "
+                "'fedavg', or 'fedprox')")
+        if self.engine not in ("tree", "flat", "flat_sharded"):
+            raise ValueError(f"unknown engine {self.engine!r}")
+        if self.angle_filter not in ("all", "dense_only"):
+            raise ValueError(f"unknown angle_filter {self.angle_filter!r}")
+        if self.transport not in transport_mod.TRANSPORTS:
+            raise ValueError(
+                f"unknown transport {self.transport!r} (expected one of "
+                f"{transport_mod.TRANSPORTS})")
+        if self.downlink not in transport_mod.DOWNLINKS:
+            raise ValueError(
+                f"unknown downlink {self.downlink!r} (expected one of "
+                f"{transport_mod.DOWNLINKS})")
+        if self.transport == "int4":
+            transport_mod.validate_group_size(self.group_size)
+        if self.error_feedback and self.transport == "f32":
+            raise ValueError(
+                "error_feedback carries the quantization residual; "
+                "transport='f32' has none (set transport='bf16', 'int8', "
+                "or 'int4')")
+        if self.downlink_error_feedback and self.downlink == "f32":
+            raise ValueError(
+                "downlink_error_feedback carries the broadcast "
+                "quantization residual; downlink='f32' has none (set "
+                "downlink='bf16' or 'int8')")
+        if self.downlink_delta and self.downlink == "f32":
+            raise ValueError(
+                "downlink_delta broadcasts the quantized model diff "
+                "against the previous broadcast; downlink='f32' ships "
+                "exact params and has nothing to gain from it (set "
+                "downlink='bf16' or 'int8')")
+        if self.mode == "sequential":
+            if self.engine != "tree":
+                raise ValueError(
+                    f"engine={self.engine!r} requires mode='parallel' "
+                    "(sequential mode never materializes the stacked "
+                    "(K, N) delta buffer; its stats already stream "
+                    "through round_stats)")
+            if self.transport != "f32":
+                raise ValueError(
+                    "transport compresses the stacked parallel uplink "
+                    "buffer; sequential mode streams one client at a "
+                    "time (use mode='parallel' for quantized transport)")
+            if self.downlink != "f32":
+                raise ValueError(
+                    "quantized downlink is threaded through the parallel "
+                    "round engines; use mode='parallel' for downlink != "
+                    "'f32'")
+        if self.aggregation not in ("sync", "buffered"):
+            raise ValueError(
+                f"unknown aggregation {self.aggregation!r} (expected "
+                "'sync' or 'buffered')")
+        if self.aggregation == "buffered":
+            if self.mode != "parallel":
+                raise ValueError(
+                    "aggregation='buffered' admits reports into the "
+                    "stacked (K, N) uplink buffer and requires "
+                    "mode='parallel'")
+            if self.stale_angles:
+                raise ValueError(
+                    "stale_angles is the sequential one-pass variant; "
+                    "aggregation='buffered' already measures angles at "
+                    "flush time (unset stale_angles)")
+            if not 0 <= self.buffer_m <= self.clients_per_round:
+                raise ValueError(
+                    f"buffer_m={self.buffer_m} must be in "
+                    f"[0, clients_per_round={self.clients_per_round}] "
+                    "(0 means flush only when the whole cohort landed)")
+            if self.staleness_beta < 0:
+                raise ValueError(
+                    f"staleness_beta={self.staleness_beta} must be >= 0 "
+                    "(the discount is exp(-staleness_beta * age))")
+            if not 0.0 <= self.straggle_prob <= 1.0:
+                raise ValueError(
+                    f"straggle_prob={self.straggle_prob} must be a "
+                    "probability in [0, 1]")
+            if not 0.0 <= self.dropout_prob <= 1.0:
+                raise ValueError(
+                    f"dropout_prob={self.dropout_prob} must be a "
+                    "probability in [0, 1]")
+            if self.straggle_prob > 0 and self.straggle_max < 1:
+                raise ValueError(
+                    f"straggle_max={self.straggle_max} must be >= 1 when "
+                    "straggle_prob > 0 (stragglers delay by 1..max ticks)")
+        else:
+            for field, val, default in (
+                    ("buffer_m", self.buffer_m, 0),
+                    ("straggle_prob", self.straggle_prob, 0.0),
+                    ("dropout_prob", self.dropout_prob, 0.0)):
+                if val != default:
+                    raise ValueError(
+                        f"{field}={val} requires aggregation='buffered' "
+                        "(the sync round is lockstep: every report lands "
+                        "before the server aggregates)")
+        return self
 
 
 class RoundState(NamedTuple):
@@ -175,6 +319,9 @@ class RoundState(NamedTuple):
     dl_ef: Optional[jax.Array] = None  # (N,) downlink EF residual
     prev_broadcast: Optional[jax.Array] = None  # (N,) last broadcast
     #   reconstruction (downlink_delta; zeros -> round 0 ships the model)
+    buf: Optional[buffer_mod.ReportBuffer] = None  # buffered-async report
+    #   buffer: (K, N) in-flight report rows + per-row staleness
+    #   bookkeeping (aggregation="buffered"; see core.buffer)
     rng: Optional[jax.Array] = None  # device PRNG key — owned by the
     #   data/selection pipeline (core.driver); round_fn threads it as-is
     round: Any = 0  # i32 round counter (drives the lr schedule)
@@ -190,10 +337,13 @@ def init_round_state(fl: FLConfig, params: PyTree,
     """Fresh RoundState for `params` under `fl`.
 
     Allocates exactly the optional buffers the config calls for (uplink
-    EF rows, downlink EF vector, previous-broadcast vector) so the state
-    structure is a pure function of the config. `seed` is an int (a new
+    EF rows, downlink EF vector, previous-broadcast vector, buffered
+    report buffer) so the state structure is a pure function of the
+    config — `fl.validate()` runs first, so an inconsistent config fails
+    here rather than at trace time. `seed` is an int (a new
     `jax.random.key` is made) or an existing PRNG key array.
     """
+    fl.validate()
     n = param_count(params)
     rng = seed if isinstance(seed, jax.Array) else jax.random.key(seed)
     return RoundState(
@@ -206,6 +356,8 @@ def init_round_state(fl: FLConfig, params: PyTree,
                if fl.downlink_error_feedback else None),
         prev_broadcast=(transport_mod.downlink.init_prev_broadcast(n)
                         if fl.downlink_delta else None),
+        buf=(buffer_mod.init_report_buffer(fl.clients_per_round, n)
+             if fl.aggregation == "buffered" else None),
         rng=rng,
         round=jnp.int32(0),
     )
@@ -227,6 +379,7 @@ def state_to_tree(state: RoundState) -> dict:
         "ef": state.ef,
         "dl_ef": state.dl_ef,
         "prev_broadcast": state.prev_broadcast,
+        "buf": (None if state.buf is None else state.buf._asdict()),
         "rng": state.rng,
         "round": state.round,
     }
@@ -286,6 +439,18 @@ def state_from_tree(cfg: FLConfig, tree: dict) -> RoundState:
                 f"checkpoint carries {name!r} but cfg.{flag}=False — "
                 "dropping a live residual would silently change the run; "
                 "restore with a matching config")
+    buffered = cfg.aggregation == "buffered"
+    have_buf = tree.get("buf") is not None
+    if buffered and not have_buf:
+        raise ValueError(
+            "cfg.aggregation='buffered' but the checkpoint has no 'buf' — "
+            "it was written by a sync-aggregation run; restore with a "
+            "matching config (or re-init the report buffer yourself)")
+    if have_buf and not buffered:
+        raise ValueError(
+            "checkpoint carries 'buf' but cfg.aggregation='sync' — "
+            "dropping the in-flight reports would silently change the "
+            "run; restore with a matching config")
 
     params = tree["params"]
     rng = tree["rng"]
@@ -300,10 +465,24 @@ def state_from_tree(cfg: FLConfig, tree: dict) -> RoundState:
     ef = tree.get("ef")
     if ef is not None:
         ef = _resize_rows(ef, cfg.num_clients)
+    buf = tree.get("buf")
+    if buf is not None:
+        # in-flight reports restore verbatim (K = clients_per_round rows;
+        # a K mismatch fails the template check below — resizing a report
+        # buffer would orphan live slot ids, unlike the elastic per-client
+        # state above).
+        buf = buffer_mod.ReportBuffer(
+            data=jnp.asarray(buf["data"], jnp.float32),
+            slot=jnp.asarray(buf["slot"], jnp.int32),
+            sizes=jnp.asarray(buf["sizes"], jnp.float32),
+            age=jnp.asarray(buf["age"], jnp.int32),
+            wait=jnp.asarray(buf["wait"], jnp.int32),
+            free=jnp.asarray(buf["free"], bool),
+        )
     state = RoundState(
         params=params, angle=angle, prev_delta=tree["prev_delta"],
         ef=ef, dl_ef=tree.get("dl_ef"),
-        prev_broadcast=tree.get("prev_broadcast"),
+        prev_broadcast=tree.get("prev_broadcast"), buf=buf,
         rng=rng, round=jnp.asarray(tree["round"], jnp.int32),
     )
 
@@ -405,11 +584,24 @@ def _scatter_angles(state: AngleState, sel_idx, theta):
     return weighting.update_smoothed_angle(state, theta_full, mask)
 
 
+def _scatter_angles_masked(state: AngleState, sel_idx, theta, valid):
+    """Eq. 9 scatter restricted to the rows where `valid` — invalid rows
+    are routed out of bounds and dropped, so a buffered flush only smooths
+    the angles of the reports it actually aggregated. With `valid` all
+    True this is op-for-op `_scatter_angles` (`where(True, i, n) == i` and
+    an in-bounds mode="drop" scatter is the plain scatter)."""
+    n = state.smoothed.shape[0]
+    idx = jnp.where(valid, sel_idx, n)
+    mask = jnp.zeros((n,), bool).at[idx].set(True, mode="drop")
+    theta_full = jnp.zeros((n,), jnp.float32).at[idx].set(theta, mode="drop")
+    return weighting.update_smoothed_angle(state, theta_full, mask)
+
+
 def make_round_fn(loss_fn: Callable, fl: FLConfig,
                   delta_constraint: Optional[Callable] = None,
                   angle_pred: Optional[Callable] = None,
                   grad_constraint: Optional[Callable] = None,
-                  mesh=None) -> Callable:
+                  mesh=None, arrival_fn: Optional[Callable] = None) -> Callable:
     """Build the jit-able federated round.
 
     round_fn(state, batches, sel_idx, data_sizes) -> (state, metrics)
@@ -444,62 +636,29 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
     When `angle_pred` is None, `fl.angle_filter` selects a built-in
     predicate ("dense_only" -> `moe_dense_only_pred`); an explicit
     `angle_pred` overrides the config.
+
+    `fl.aggregation == "buffered"` builds the buffered-async tick instead
+    of the lockstep round (same signature, same engines): reports are
+    admitted into `state.buf` and the params advance only on flush ticks.
+    `arrival_fn(tick) -> (delay (K,) i32, drop (K,) bool)` overrides the
+    config's random straggler/dropout draw with an explicit schedule
+    (`core.server.fixed_arrival_schedule`); sync mode ignores it.
     """
-    if fl.angle_filter not in ("all", "dense_only"):
-        raise ValueError(f"unknown angle_filter {fl.angle_filter!r}")
+    fl.validate()
     if angle_pred is None and fl.angle_filter == "dense_only":
         angle_pred = moe_dense_only_pred
-    if fl.engine not in ("tree", "flat", "flat_sharded"):
-        raise ValueError(f"unknown engine {fl.engine!r}")
-    if fl.transport not in transport_mod.TRANSPORTS:
-        raise ValueError(
-            f"unknown transport {fl.transport!r} (expected one of "
-            f"{transport_mod.TRANSPORTS})")
-    if fl.downlink not in transport_mod.DOWNLINKS:
-        raise ValueError(
-            f"unknown downlink {fl.downlink!r} (expected one of "
-            f"{transport_mod.DOWNLINKS})")
-    if fl.transport == "int4":
-        transport_mod.validate_group_size(fl.group_size)
-    if fl.error_feedback and fl.transport == "f32":
-        raise ValueError(
-            "error_feedback carries the quantization residual; transport="
-            "'f32' has none (set transport='bf16', 'int8', or 'int4')")
-    if fl.downlink_error_feedback and fl.downlink == "f32":
-        raise ValueError(
-            "downlink_error_feedback carries the broadcast quantization "
-            "residual; downlink='f32' has none (set downlink='bf16' or "
-            "'int8')")
-    if fl.downlink_delta and fl.downlink == "f32":
-        raise ValueError(
-            "downlink_delta broadcasts the quantized model diff against "
-            "the previous broadcast; downlink='f32' ships exact params "
-            "and has nothing to gain from it (set downlink='bf16' or "
-            "'int8')")
     if fl.engine == "flat_sharded" and mesh is None:
         raise ValueError(
             "engine='flat_sharded' shards the (K, N) delta buffer over "
             "the mesh client axis; pass mesh= to make_round_fn")
     if fl.mode == "parallel":
+        if fl.aggregation == "buffered":
+            return _make_buffered_round(loss_fn, fl, delta_constraint,
+                                        angle_pred, grad_constraint, mesh,
+                                        arrival_fn)
         return _make_parallel_round(loss_fn, fl, delta_constraint, angle_pred,
                                     grad_constraint, mesh)
-    if fl.mode == "sequential":
-        if fl.engine != "tree":
-            raise ValueError(
-                f"engine={fl.engine!r} requires mode='parallel' (sequential "
-                "mode never materializes the stacked (K, N) delta buffer; "
-                "its stats already stream through round_stats)")
-        if fl.transport != "f32":
-            raise ValueError(
-                "transport compresses the stacked parallel uplink buffer; "
-                "sequential mode streams one client at a time (use "
-                "mode='parallel' for quantized transport)")
-        if fl.downlink != "f32":
-            raise ValueError(
-                "quantized downlink is threaded through the parallel round "
-                "engines; use mode='parallel' for downlink != 'f32'")
-        return _make_sequential_round(loss_fn, fl, angle_pred, grad_constraint)
-    raise ValueError(fl.mode)
+    return _make_sequential_round(loss_fn, fl, angle_pred, grad_constraint)
 
 
 def _lr_at(fl: FLConfig, round_idx):
@@ -746,6 +905,261 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             params=new_params, angle=new_state, prev_delta=g_avg,
             ef=new_ef, dl_ef=new_dl, prev_broadcast=new_bcast,
             round=state.round + 1,
+        ), metrics
+
+    return round_fn
+
+
+def _make_buffered_round(loss_fn, fl: FLConfig, delta_constraint,
+                         angle_pred=None, grad_constraint=None, mesh=None,
+                         arrival_fn=None):
+    """The buffered-async server tick (aggregation="buffered").
+
+    Same `round_fn(state, batches, sel_idx, data_sizes)` signature as the
+    lockstep round, but one call is one server TICK, not one model
+    version: the K candidate clients pull the current broadcast, train,
+    and their reports are ADMITTED into the free slots of the K-row
+    report buffer (`state.buf`, see core.buffer) with simulated arrival
+    delays; the params advance only on ticks where at least `buffer_m`
+    of the in-flight reports have LANDED. `state.round` counts ticks (it
+    still drives the lr schedule and `arrival_fn(tick)` indexing); a
+    report's staleness `age` counts flushes — actual model versions —
+    between its pull and its aggregation.
+
+    Everything is mask-based so the tick is shape-static: non-admitted
+    candidates are computed and discarded (occupied slots, busy clients,
+    in-transit dropouts), non-landed rows get exactly zero aggregation
+    weight, and a non-flush tick applies `jnp.where(do_flush, ...)`
+    no-ops to params/angles/prev_delta. With buffer_m == K and no
+    stragglers/dropouts every tick admits, lands, and flushes the whole
+    cohort at age 0, and each masked op reduces bit-exactly to its sync
+    counterpart — that equivalence is pinned per engine by
+    tests/test_buffered.py.
+    """
+    stochastic = (arrival_fn is None
+                  and (fl.straggle_prob > 0 or fl.dropout_prob > 0))
+    m_flush = fl.buffer_m if fl.buffer_m > 0 else fl.clients_per_round
+    flush_ops = None
+    if fl.engine == "flat_sharded":
+        # wire compression happens at admission (the buffer holds
+        # dequantized f32 rows), so the flush region never needs scales.
+        flush_ops = fl_shard_map.make_buffered_flush_ops(
+            mesh, alpha=fl.alpha, method=fl.method, beta=fl.staleness_beta,
+            interpret=_resolve_interpret(fl))
+        row_sharding = fl_shard_map.flat_client_sharding(mesh)
+        csize = fl_shard_map.client_axis_size(mesh)
+
+    def round_fn(state: RoundState, batches, sel_idx, data_sizes):
+        if state.buf is None:
+            raise ValueError(
+                "fl.aggregation='buffered': state.buf is missing — build "
+                "the state with fl.init_round_state (or "
+                "core.buffer.init_report_buffer)")
+        if fl.error_feedback and state.ef is None:
+            raise ValueError(
+                "fl.error_feedback=True: state.ef is missing — build the "
+                "state with fl.init_round_state (or "
+                "transport.init_error_feedback)")
+        if fl.downlink_error_feedback and state.dl_ef is None:
+            raise ValueError(
+                "fl.downlink_error_feedback=True: state.dl_ef is missing "
+                "— build the state with fl.init_round_state (or "
+                "transport.downlink.init_downlink_error_feedback)")
+        if fl.downlink_delta and state.prev_broadcast is None:
+            raise ValueError(
+                "fl.downlink_delta=True: state.prev_broadcast is missing "
+                "— build the state with fl.init_round_state (or "
+                "transport.downlink.init_prev_broadcast)")
+        params, angle_state = state.params, state.angle
+        ef_state, dl_state = state.ef, state.dl_ef
+        lr = _lr_at(fl, state.round)
+        k = fl.clients_per_round
+
+        # ---- arrival injection: when do this tick's reports land? ----
+        # RNG discipline: the key is only consumed when the config is
+        # actually stochastic, so the deterministic case threads
+        # state.rng untouched exactly like the sync round (this is part
+        # of the bit-exact sync-equivalence contract).
+        new_rng = state.rng
+        if arrival_fn is not None:
+            delay, drop = arrival_fn(state.round)
+            delay = jnp.asarray(delay, jnp.int32)
+            drop = jnp.asarray(drop, bool)
+        elif stochastic:
+            new_rng, k_arr = jax.random.split(state.rng)
+            delay, drop = buffer_mod.draw_arrivals(
+                k_arr, k, fl.straggle_prob, fl.straggle_max,
+                fl.dropout_prob)
+        else:
+            delay = jnp.zeros((k,), jnp.int32)
+            drop = jnp.zeros((k,), bool)
+
+        # ---- server -> client downlink (identical to the sync round:
+        # candidates pull the CURRENT broadcast every tick, so the
+        # downlink EF / prev-broadcast bookkeeping advances per tick) ----
+        params_srv = params
+        new_dl, new_bcast = dl_state, state.prev_broadcast
+        if fl.downlink != "f32":
+            pvec, punravel = treemath.tree_ravel(params)
+            if fl.downlink_delta:
+                pvec = pvec - state.prev_broadcast
+            if fl.downlink_error_feedback:
+                pvec = pvec + dl_state
+            qd = transport_mod.downlink.compress(pvec, fl.downlink)
+            recon = transport_mod.downlink.decompress(qd)
+            if fl.downlink_error_feedback:
+                new_dl = pvec - recon
+            if fl.downlink_delta:
+                recon = state.prev_broadcast + recon
+                new_bcast = recon
+            params = punravel(recon)
+
+        # ---- candidate local updates (all K slots compute; admission
+        # masks decide whose report actually enters the buffer) ----
+        deltas, losses = jax.vmap(
+            lambda b: local_update(loss_fn, params, b, lr, fl.prox_mu,
+                                   grad_constraint)
+        )(batches)
+        if delta_constraint is not None:
+            deltas = delta_constraint(deltas)
+
+        # a free slot admits its candidate unless the client already has
+        # a report in flight (full participation re-offers everyone) or
+        # the report drops in transit (the slot stays free — liveness
+        # never waits on a timeout).
+        busy = buffer_mod.population_busy(state.buf, fl.num_clients)
+        admit = state.buf.free & ~busy[sel_idx] & ~drop
+
+        # ---- client uplink: compress to the wire, buffer the f32
+        # reconstruction (the tree engine never reads the wire, and rows
+        # must survive across ticks independent of the transport) ----
+        flat0, unravel0 = treemath.tree_ravel_stacked(deltas)
+        new_ef = ef_state
+        if fl.transport == "f32":
+            rows = flat0
+        else:
+            if fl.error_feedback:
+                flat0 = flat0 + ef_state[sel_idx]
+            q = transport_mod.quantize(flat0, fl.transport,
+                                       group_size=fl.group_size)
+            rows = transport_mod.dequantize(q)
+            if fl.error_feedback:
+                # the residual of a non-admitted report stays carried —
+                # that report never shipped, so nothing was dropped yet.
+                new_ef = ef_state.at[sel_idx].set(
+                    jnp.where(admit[:, None], flat0 - rows,
+                              ef_state[sel_idx]))
+        buf = buffer_mod.admit(state.buf, admit, rows, sel_idx,
+                               data_sizes, delay)
+
+        landed = buffer_mod.landed_mask(buf)
+        num_landed = jnp.sum(landed.astype(jnp.int32))
+        do_flush = num_landed >= m_flush
+
+        # staleness-discounted FedAvg weights over the landed rows — the
+        # angle-reference global delta g, exactly psi_avg when every row
+        # landed at age 0.
+        psi_b = weighting.buffered_fedavg_weights(
+            buf.sizes, buf.age, landed, fl.staleness_beta)
+
+        maskv = None
+        if fl.engine != "tree" and angle_pred:
+            maskv = treemath.segment_mask(params,
+                                          angle_keep_list(params, angle_pred))
+
+        if fl.engine == "flat_sharded":
+            # same single-region schedule as the sync round, over the f32
+            # report rows; padded rows land False -> exactly zero weight.
+            kp = -(-k // csize) * csize
+            values = jax.lax.with_sharding_constraint(
+                _pad_rows(buf.data, kp), row_sharding)
+            mvec = (maskv if maskv is not None
+                    else jnp.ones((buf.data.shape[1],), jnp.float32))
+            g_flat, dots, sqs, sqg, delta_flat, theta, _, w = flush_ops(
+                values, _pad_rows(psi_b, kp), mvec,
+                _pad_rows(angle_state.smoothed[buf.slot], kp),
+                _pad_rows(angle_state.count[buf.slot], kp),
+                _pad_rows(buf.sizes, kp, 1.0), _pad_rows(buf.age, kp),
+                _pad_rows(landed, kp, False))
+            dots, sqs = dots[:k], sqs[:k]
+            theta, w = theta[:k], w[:k]
+            g_avg = unravel0(g_flat, jnp.float32)
+            delta = unravel0(delta_flat)
+        elif fl.engine == "flat":
+            interpret = _resolve_interpret(fl)
+            g_flat = weighted_agg_mod.weighted_agg(
+                psi_b, buf.data, interpret=interpret, out_dtype=jnp.float32)
+            dots, sqs, sqg = round_stats_mod.round_stats(
+                buf.data, g_flat, maskv, interpret=interpret)
+            g_avg = unravel0(g_flat, jnp.float32)
+            theta = weighting.instantaneous_angle(dots, sqs, sqg)
+        else:
+            deltas_b = treemath.tree_unravel_stacked(deltas, buf.data,
+                                                     jnp.float32)
+            angle_mask = (build_angle_mask(params, angle_pred)
+                          if angle_pred else None)
+            g_avg = treemath.tree_weighted_sum(deltas_b, psi_b, jnp.float32)
+            d_view = angle_mask(deltas_b) if angle_mask else deltas_b
+            g_view = angle_mask(g_avg) if angle_mask else g_avg
+            dots = treemath.tree_vdot_batched(d_view, g_view)
+            sqs = treemath.tree_sqnorm_batched(d_view)
+            sqg = treemath.tree_sqnorm(g_view)
+            theta = weighting.instantaneous_angle(dots, sqs, sqg)
+
+        # Eq. 9 over the LANDED reports only, applied only on flush ticks
+        # (both masks reduce to the sync scatter when everything landed).
+        ang_flushed = _scatter_angles_masked(angle_state, buf.slot, theta,
+                                             landed)
+        new_angle = jax.tree.map(lambda a, b: jnp.where(do_flush, a, b),
+                                 ang_flushed, angle_state)
+        theta_sm = new_angle.smoothed[buf.slot]
+        if fl.engine != "flat_sharded":
+            if fl.method == "fedadp":
+                w = weighting.buffered_fedadp_weights(
+                    theta_sm, buf.sizes, buf.age, landed, fl.alpha,
+                    fl.staleness_beta)
+            else:
+                w = psi_b
+            if fl.engine == "flat":
+                delta_flat = (g_flat if fl.method != "fedadp" else
+                              weighted_agg_mod.weighted_agg(
+                                  w, buf.data, interpret=interpret,
+                                  out_dtype=jnp.float32))
+                delta = unravel0(delta_flat)
+            else:
+                delta = jax.tree.map(
+                    lambda d, p: d.astype(p.dtype),
+                    treemath.tree_weighted_sum(deltas_b, w, jnp.float32),
+                    params)
+
+        # flush: apply the aggregated delta to the master params — or, on
+        # a non-flush tick, carry everything unchanged (where no-ops).
+        new_params = jax.tree.map(
+            lambda a, b: jnp.where(do_flush, a, b),
+            treemath.tree_add(params_srv, delta), params_srv)
+        new_prev = jax.tree.map(lambda a, b: jnp.where(do_flush, a, b),
+                                g_avg, state.prev_delta)
+        final_buf = buffer_mod.advance(buf, landed, do_flush)
+
+        nl_f = jnp.maximum(num_landed.astype(jnp.float32), 1.0)
+        div = jnp.sum(jnp.where(
+            landed, jnp.sqrt(jnp.maximum(sqs - 2 * dots + sqg, 0.0)),
+            0.0)) / nl_f / lr
+        metrics = {
+            "loss": jnp.mean(losses), "theta": theta,
+            "theta_smoothed": theta_sm, "weights": w, "divergence": div,
+            "lr": lr, "cos": jnp.cos(theta),
+            "expected_contribution": weighting.expected_contribution(
+                w, jnp.cos(theta)),
+            "flushed": do_flush.astype(jnp.int32),
+            "buffer_landed": num_landed,
+            "staleness": jnp.sum(jnp.where(landed, buf.age, 0)
+                                 .astype(jnp.float32)) / nl_f,
+        }
+        return state._replace(
+            params=new_params, angle=new_angle, prev_delta=new_prev,
+            ef=new_ef, dl_ef=new_dl, prev_broadcast=new_bcast,
+            buf=final_buf, rng=new_rng, round=state.round + 1,
         ), metrics
 
     return round_fn

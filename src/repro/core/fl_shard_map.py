@@ -219,6 +219,66 @@ def make_round_ops(mesh: Mesh, *, alpha: float, method: str = "fedadp",
         in_specs=(row_spec,) + (P(),) * 5, out_specs=outs)
 
 
+def make_buffered_flush_ops(mesh: Mesh, *, alpha: float,
+                            method: str = "fedadp", beta: float = 0.0,
+                            interpret: bool = True):
+    """The buffered-async flush as ONE shard_map call (core/fl.py's
+    aggregation="buffered" under engine="flat_sharded").
+
+    Exactly `make_round_ops`' schedule — (1) psi-weighted psum, (2) stat
+    psums, (3) replicated weighting, (4) weighted psum — but over the
+    report buffer's rows instead of this round's uplink. Two differences:
+
+    * No scales operands: wire compression happened at ADMISSION, so the
+      buffer always holds dequantized f32 rows and the region streams
+      them through the plain kernels regardless of the config transport.
+    * Step (3) is the staleness-aware weighting
+      (`weighting.buffered_*_weights`): sizes/age/landed ride in as
+      replicated (K,) operands and non-landed rows — including client-
+      axis padding rows, which must be padded landed=False — get exactly
+      zero weight, so they contribute nothing to the aggregate psum.
+
+    flush_op(values, psi, mask, smoothed_sel, count_sel, sizes, age,
+    landed) -> (g_flat, dots, sqs, sqg, delta_flat, theta, theta_sm, w),
+    mirroring `make_round_ops`' output row so core/fl.py's buffered path
+    consumes both identically.
+    """
+    caxis = _client_axis(mesh)
+    row_spec = P(caxis)
+
+    def _body(values, psi, mask, smoothed_sel, count_sel, sizes, age,
+              landed):
+        my = _shard_slots(values, caxis)
+        g_flat = jax.lax.psum(
+            weighted_agg_mod.weighted_agg(
+                psi[my], values, interpret=interpret,
+                out_dtype=jnp.float32),
+            caxis)
+        d_loc, s_loc, sqg = round_stats_mod.round_stats(
+            values, g_flat, mask, interpret=interpret)
+        k = psi.shape[0]
+        dots = jax.lax.psum(
+            jnp.zeros((k,), jnp.float32).at[my].set(d_loc), caxis)
+        sqs = jax.lax.psum(
+            jnp.zeros((k,), jnp.float32).at[my].set(s_loc), caxis)
+        theta = weighting.instantaneous_angle(dots, sqs, sqg)
+        cnt = count_sel.astype(jnp.float32) + 1.0
+        theta_sm = ((cnt - 1.0) * smoothed_sel + theta) / cnt  # Eq. 9
+        if method == "fedadp":
+            w = weighting.buffered_fedadp_weights(
+                theta_sm, sizes, age, landed, alpha, beta)
+        else:
+            w = weighting.buffered_fedavg_weights(sizes, age, landed, beta)
+        delta_flat = jax.lax.psum(
+            weighted_agg_mod.weighted_agg(
+                w[my], values, interpret=interpret, out_dtype=jnp.float32),
+            caxis)
+        return g_flat, dots, sqs, sqg, delta_flat, theta, theta_sm, w
+
+    return _shard_map(_body, mesh, in_specs=(row_spec,) + (P(),) * 7,
+                      out_specs=(P(),) * 8)
+
+
 def fedadp_aggregate(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
                      method: str = "fedadp", engine: str = "tree",
                      interpret: bool = True, transport: str = "f32",

@@ -8,17 +8,20 @@ compiled step whose carry is the unified `fl.RoundState`.
 
 Two execution modes share that step bit-for-bit:
 
-* `step()` / `run()` — stepwise: one jit dispatch + `device_get` per
-  round (the per-round tests' path, and the easiest to poke at).
-* `run_scanned()` — the whole run as chunked `lax.scan` blocks with
-  host-side early exit between blocks (`driver.run_rounds`), removing
-  the per-round dispatch/sync overhead entirely. Table-I semantics
-  (eval cadence, rounds-to-target) are preserved exactly.
+* `run(mode="stepwise")` (and `step()`) — one jit dispatch +
+  `device_get` per round (the per-round tests' path, and the easiest
+  to poke at).
+* `run(mode="scanned")` — the whole run as chunked `lax.scan` blocks
+  with host-side early exit between blocks (`driver.run_rounds`),
+  removing the per-round dispatch/sync overhead entirely. Table-I
+  semantics (eval cadence, rounds-to-target) are preserved exactly.
+  (`run_scanned()` survives as a warn-once deprecation shim.)
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Optional
 
 import jax
@@ -30,6 +33,34 @@ from repro.core import driver as driver_mod
 from repro.core import fl as fl_mod
 from repro.data.synthetic import Dataset
 from repro.models import small
+
+
+def fixed_arrival_schedule(delays, drops):
+    """Explicit per-tick arrival schedule for the buffered server.
+
+    `delays` is (T, K) int — the arrival delay (in server ticks; 0 = on
+    time) of each of tick t's K candidate reports — and `drops` is
+    (T, K) bool — reports lost in transit (never admitted). Returns an
+    `arrival_fn(tick) -> (delay, drop)` for `fl.make_round_fn` /
+    `FedServer(arrival_fn=)`, replacing the config's random
+    straggle/dropout draw with this deterministic schedule (the
+    straggler-semantics tests pin exact flush behaviour with it). Ticks
+    at or beyond T reuse the last row — make it zeros/False for an
+    all-on-time tail.
+    """
+    delays = jnp.asarray(delays, jnp.int32)
+    drops = jnp.asarray(drops, bool)
+    if delays.shape != drops.shape:
+        raise ValueError(
+            f"delays {delays.shape} and drops {drops.shape} must be the "
+            "same (T, K) shape")
+    t_max = delays.shape[0] - 1
+
+    def arrival_fn(tick):
+        t = jnp.minimum(jnp.asarray(tick, jnp.int32), t_max)
+        return delays[t], drops[t]
+
+    return arrival_fn
 
 
 @dataclasses.dataclass
@@ -56,6 +87,7 @@ class FedServer:
         seed: int = 0,
         angle_pred=None,
         mesh=None,
+        arrival_fn=None,
     ):
         # fl.engine selects the round execution path ("tree" reference,
         # the flat-buffer Pallas path, or the client-sharded
@@ -64,7 +96,10 @@ class FedServer:
         # make_round_fn unchanged. fl.transport compresses the client
         # uplink and fl.downlink the server broadcast (optionally
         # delta-encoded via fl.downlink_delta); the EF residual carries
-        # live inside the RoundState.
+        # live inside the RoundState. fl.aggregation="buffered" turns
+        # each step into a buffered-async server tick; `arrival_fn`
+        # (fixed_arrival_schedule) then overrides the config's random
+        # straggler/dropout draw.
         self.fl = fl
         self.nodes = nodes
         self.test = test
@@ -79,7 +114,7 @@ class FedServer:
         eval_fn = driver_mod.make_eval_fn(self.apply_fn, test.x, test.y)
         self._step_fn = driver_mod.make_step_fn(
             loss_fn, fl, self.data, eval_fn=eval_fn, angle_pred=angle_pred,
-            mesh=mesh)
+            mesh=mesh, arrival_fn=arrival_fn)
         self._step_jit = jax.jit(self._step_fn)
         self._run_block = driver_mod.make_scan_runner(self._step_fn)
 
@@ -127,37 +162,45 @@ class FedServer:
                               self.test.x, self.test.y)
 
     def run(self, rounds: int, target_acc: Optional[float] = None,
-            eval_every: int = 1, verbose: bool = False) -> History:
-        """Stepwise training loop (one dispatch per round)."""
-        hist = History([], [], [], None, 0.0, [], [])
-        for r in range(rounds):
-            m = self.step(eval_every=eval_every)
-            self._append(hist, m)
-            acc = float(m["accuracy"])
-            if acc >= 0.0:
-                hist.accuracy.append(acc)
-                if verbose:
-                    print(f"round {r+1:4d} loss {m['loss']:.4f} acc {acc:.4f}")
-                if target_acc and acc >= target_acc and hist.rounds_to_target is None:
-                    hist.rounds_to_target = r + 1
-                    break
-        hist.final_accuracy = hist.accuracy[-1] if hist.accuracy else 0.0
-        return hist
+            eval_every: int = 1, *, mode: str = "stepwise",
+            verbose: bool = False, block: int = 8,
+            ckpt_dir: Optional[str] = None, ckpt_every_blocks: int = 1,
+            ckpt_keep: int = 3) -> History:
+        """Train for `rounds` rounds; the single public run surface.
 
-    def run_scanned(self, rounds: int, target_acc: Optional[float] = None,
-                    eval_every: int = 1, block: int = 8,
-                    ckpt_dir: Optional[str] = None,
-                    ckpt_every_blocks: int = 1,
-                    ckpt_keep: int = 3) -> History:
-        """The same run as chunked `lax.scan` blocks (driver.run_rounds):
-        `block` rounds per dispatch, host early-exit between blocks.
-        Matches `run()`'s trajectory to float tolerance (the step function
-        is shared; only the dispatch granularity differs) and its History
-        semantics exactly — per-round entries stop at rounds_to_target.
-        `ckpt_dir` snapshots the full RoundState at block boundaries
-        (see `restore` for the other half of a kill/resume);
-        rounds_to_target stays the ABSOLUTE round index when resuming a
-        mid-run state."""
+        mode="stepwise" dispatches one jitted step per round (the
+        per-round tests' path, easiest to poke at; `verbose` prints the
+        per-eval progress line). mode="scanned" runs the same step as
+        chunked `lax.scan` blocks (`driver.run_rounds`): `block` rounds
+        per dispatch with host early-exit between blocks, and `ckpt_dir`
+        snapshotting the full RoundState at block boundaries (see
+        `restore` for the other half of a kill/resume). The two modes
+        share the step function bit-for-bit — only dispatch granularity
+        differs — and their History semantics match exactly: per-round
+        entries stop at rounds_to_target, which is the ABSOLUTE round
+        index (eval cadence stays phased on `state.round` when resuming
+        a mid-run state).
+        """
+        if mode == "stepwise":
+            hist = History([], [], [], None, 0.0, [], [])
+            for r in range(rounds):
+                m = self.step(eval_every=eval_every)
+                self._append(hist, m)
+                acc = float(m["accuracy"])
+                if acc >= 0.0:
+                    hist.accuracy.append(acc)
+                    if verbose:
+                        print(f"round {r+1:4d} loss {m['loss']:.4f} "
+                              f"acc {acc:.4f}")
+                    if (target_acc and acc >= target_acc
+                            and hist.rounds_to_target is None):
+                        hist.rounds_to_target = r + 1
+                        break
+            hist.final_accuracy = hist.accuracy[-1] if hist.accuracy else 0.0
+            return hist
+        if mode != "scanned":
+            raise ValueError(
+                f"unknown mode {mode!r} (expected 'stepwise' or 'scanned')")
         start = int(self.state.round)
         self.state, ms, rtt, ran = driver_mod.run_rounds(
             self._run_block, self.state, rounds, eval_every=eval_every,
@@ -172,6 +215,25 @@ class FedServer:
                 hist.accuracy.append(acc)
         hist.final_accuracy = hist.accuracy[-1] if hist.accuracy else 0.0
         return hist
+
+    _warned_run_scanned = False
+
+    def run_scanned(self, rounds: int, target_acc: Optional[float] = None,
+                    eval_every: int = 1, block: int = 8,
+                    ckpt_dir: Optional[str] = None,
+                    ckpt_every_blocks: int = 1,
+                    ckpt_keep: int = 3) -> History:
+        """Deprecated shim: use `run(..., mode="scanned")`."""
+        if not FedServer._warned_run_scanned:
+            warnings.warn(
+                "FedServer.run_scanned(...) is deprecated; use "
+                "FedServer.run(..., mode='scanned')",
+                DeprecationWarning, stacklevel=2)
+            FedServer._warned_run_scanned = True
+        return self.run(rounds, target_acc, eval_every, mode="scanned",
+                        block=block, ckpt_dir=ckpt_dir,
+                        ckpt_every_blocks=ckpt_every_blocks,
+                        ckpt_keep=ckpt_keep)
 
     def save_checkpoint(self, ckpt_dir: str, keep: int = 3) -> str:
         """Snapshot the current RoundState into `ckpt_dir` (atomic write,

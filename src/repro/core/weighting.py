@@ -92,6 +92,58 @@ def fedavg_weights(data_sizes: jax.Array) -> jax.Array:
     return d / jnp.sum(d)
 
 
+# ---------------------------------------------------------------- buffered
+# Staleness-aware variants for the buffered-async server (FedBuff-style):
+# the flush aggregates only the LANDED reports of the in-flight cohort,
+# and a report that waited `age` model versions between pulling the
+# global params and being applied is discounted by exp(-beta * age) on
+# top of its Gompertz contribution weight — late low-contribution nodes
+# are doubly suppressed. With every report landed at age 0 the math below
+# reduces BIT-EXACTLY to the synchronous Eqs. 1/11 (subtracting
+# beta * 0 == 0.0 and multiplying by exp(-0.0) == 1.0 are exact), which
+# is what pins buffered(buffer_m=K, no stragglers) == sync.
+
+
+def staleness_discount(age: jax.Array, beta: float) -> jax.Array:
+    """exp(-beta * age): the multiplicative staleness decay of a report
+    that waited `age` server model versions before being aggregated."""
+    return jnp.exp(-beta * age.astype(jnp.float32))
+
+
+def buffered_fedadp_weights(
+    smoothed_theta: jax.Array,
+    data_sizes: jax.Array,
+    age: jax.Array,
+    landed: jax.Array,
+    alpha: float = DEFAULT_ALPHA,
+    beta: float = 0.0,
+) -> jax.Array:
+    """Eq. 11 over the landed reports with the staleness decay folded into
+    the softmax logits: softmax(f(theta~) + log D - beta * age), non-landed
+    rows at -inf so they get exactly zero weight. Returns zeros when no
+    report has landed (the flush is skipped then anyway)."""
+    f = gompertz(smoothed_theta.astype(jnp.float32), alpha)
+    logits = (f + jnp.log(data_sizes.astype(jnp.float32))
+              - beta * age.astype(jnp.float32))
+    logits = jnp.where(landed, logits, -jnp.inf)
+    w = jax.nn.softmax(logits)
+    return jnp.where(jnp.any(landed), w, jnp.zeros_like(w))
+
+
+def buffered_fedavg_weights(
+    data_sizes: jax.Array,
+    age: jax.Array,
+    landed: jax.Array,
+    beta: float = 0.0,
+) -> jax.Array:
+    """Eq. 1 over the landed reports with the staleness decay applied
+    multiplicatively: psi_i = D_i e^{-beta age_i} / sum_landed (same)."""
+    s = jnp.where(landed,
+                  data_sizes.astype(jnp.float32) * staleness_discount(age, beta),
+                  0.0)
+    return s / jnp.maximum(jnp.sum(s), 1e-12)
+
+
 def expected_contribution(weights: jax.Array, cos_theta: jax.Array) -> jax.Array:
     """E_{i|t}[cos theta_i] — the Theorem-1 expectation term.
 

@@ -54,8 +54,8 @@ def main() -> None:
     import jax.numpy as jnp
     import numpy as np
 
+    import repro
     from repro.configs import registry, shapes as shapes_mod
-    from repro.core import fl as fl_mod
     from repro.data import synthetic
     from repro.launch import steps
     from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -87,26 +87,26 @@ def main() -> None:
         # the exact config build_train_step lowered with — RoundState's
         # pytree structure is a function of it, so a hand-rebuilt copy
         # could silently diverge from the compiled signature
-        flcfg = fl_mod.FLConfig(**meta["flcfg"])
+        flcfg = repro.FLConfig(**meta["flcfg"])
         start = 0
         if args.resume:
             loaded = ckpt_io.load_latest(args.ckpt)
             if loaded is None:
                 raise SystemExit(f"--resume: no checkpoint in {args.ckpt}")
             step_no, tree = loaded
-            state = fl_mod.state_from_tree(flcfg, tree)
+            state = repro.state_from_tree(flcfg, tree)
             start = int(state.round)
             print(f"resumed {args.ckpt} @ round {start} (ckpt_{step_no:08d})")
         else:
             params = transformer.init_params(jax.random.key(0), cfg)
-            state = fl_mod.init_round_state(flcfg, params)
+            state = repro.init_round_state(flcfg, params)
         state = jax.device_put(state, in_shard[0])
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.ones((K,))
 
         def checkpoint(round_no: int) -> None:
             ckpt_io.save_checkpoint(args.ckpt, round_no,
-                                    fl_mod.state_to_tree(state))
+                                    repro.state_to_tree(state))
             print(f"checkpoint -> {args.ckpt} @ round {round_no}")
 
         for r in range(start, args.rounds):
