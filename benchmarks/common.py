@@ -54,6 +54,9 @@ def run_fl(
     straggle_max: int = 1,
     dropout_prob: float = 0.0,
     arrival_fn=None,
+    telemetry: str | None = None,
+    sink=None,
+    telemetry_every: int = 1,
 ):
     """Returns (history, seconds_per_round).
 
@@ -65,6 +68,10 @@ def run_fl(
     buffer_m/staleness/straggle/dropout knobs (or an explicit
     `arrival_fn` schedule) run the buffered-async server instead of the
     lockstep round — rounds then count server ticks.
+
+    `telemetry="node"` builds the config with per-node tel/* metrics and
+    `sink` streams the TIMED run (warmup rounds never reach the sink) as
+    repro.telemetry schema events, `telemetry_every` subsampling rounds.
     """
     train, test = get_task()
     nodes = synthetic.make_federated(train, spec, samples_per_node=samples,
@@ -78,6 +85,7 @@ def run_fl(
         aggregation=aggregation, buffer_m=buffer_m,
         staleness_beta=staleness_beta, straggle_prob=straggle_prob,
         straggle_max=straggle_max, dropout_prob=dropout_prob,
+        telemetry=telemetry,
     )
     server = repro.FedServer(model, cfg, nodes, test, batch_size=batch_size,
                              seed=seed, mesh=mesh, arrival_fn=arrival_fn)
@@ -92,7 +100,8 @@ def run_fl(
     t0 = time.time()
     hist = server.run(rounds, target_acc=target, eval_every=eval_every,
                       mode="scanned" if scan else "stepwise",
-                      block=scan_block)
+                      block=scan_block, sink=sink,
+                      telemetry_every=telemetry_every)
     dt = time.time() - t0
     done = len(hist.loss) or 1
     return hist, dt / done

@@ -248,11 +248,14 @@ def engine_ab(full: bool = False, tiny: bool = False) -> None:
                 {"K": K, "d": d, "engine": engine, "us_per_round": us[engine]}
             )
         emit(f"engine_ab/K={K}/flat_over_tree", 0.0, f"{us['flat'] / us['tree']:.3f}")
+    from repro.telemetry.manifest import run_manifest
+
     payload = {
         "bench": "engine_ab",
         "d": d,
         "tiny": tiny,
         "device_count": jax.device_count(),
+        "manifest": run_manifest(),
         "records": records,
     }
     with open("BENCH_engine.json", "w") as f:
@@ -421,6 +424,8 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
             "within_10pct": all(r is not None and r <= 1.1 for r in ratios.values()),
         }
 
+    from repro.telemetry.manifest import run_manifest
+
     payload = {
         "bench": "transport_sweep",
         "d": d,
@@ -428,6 +433,7 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
         "tiny": tiny,
         "transports": list(transport_mod.TRANSPORTS),
         "downlinks": list(transport_mod.DOWNLINKS),
+        "manifest": run_manifest(),
         "records": records,
         "convergence": convergence,
     }
@@ -496,10 +502,13 @@ def driver_ab(full: bool = False, tiny: bool = False) -> None:
             {"K": K, "path": "python_loop", "us_per_round": loop_us},
             {"K": K, "path": "scanned", "us_per_round": scan_us},
         ]
+    from repro.telemetry.manifest import run_manifest
+
     payload = {
         "bench": "driver_ab",
         "tiny": tiny,
         "rounds_per_dispatch": R,
+        "manifest": run_manifest(),
         "records": records,
         "scanned_over_loop": {str(k): v for k, v in ratios.items()},
         # the acceptance claim the artifact carries: the scanned driver is
@@ -509,6 +518,48 @@ def driver_ab(full: bool = False, tiny: bool = False) -> None:
     with open("BENCH_driver.json", "w") as f:
         json.dump(payload, f, indent=2)
     emit("driver_ab/json", 0.0, "BENCH_driver.json")
+
+
+def telemetry_bench(full: bool = False, tiny: bool = False) -> None:
+    """Telemetry-layer end-to-end: a scanned fedadp run streamed to a
+    JSONL sink, then summarized back by the flstat logic.
+
+    Writes the stream itself as the artifact (BENCH_telemetry.jsonl —
+    the CI bench-smoke job schema-validates it and asserts the softmax
+    weight-sum invariant with scripts/flstat.py) and emits the
+    acceptance claim: rounds-to-85% recomputed from the stream ALONE
+    must agree with the in-process History. `tiny` shrinks the task for
+    the CI smoke job (the target is usually not reached there — the
+    claim then checks that both sides agree on "not reached")."""
+    from repro.telemetry import report as tel_report
+    from repro.telemetry.sinks import JSONLSink, load_events
+
+    target = 0.85
+    rounds = 10 if tiny else (120 if full else 60)
+    spec = node_spec(2, 2, 1) if tiny else node_spec(5, 5, 1)
+    sink = JSONLSink("BENCH_telemetry.jsonl")
+    hist, spr = run_fl(
+        "fedadp", spec, rounds=rounds, target=target, scan=True,
+        samples=100 if tiny else 600, batch_size=25 if tiny else 50,
+        telemetry="node", sink=sink,
+    )
+    sink.close()
+    events = load_events(sink.path)
+    s = tel_report.summarize(events, target=target)
+    checked = tel_report.check_weight_sums(events)
+    emit("telemetry/rounds_streamed", spr * 1e6, s["rounds"])
+    emit("telemetry/weight_sum_rounds_ok", 0.0, checked)
+    emit(
+        "telemetry/rounds_to_85/flstat",
+        0.0,
+        s["rounds_to_target"] or f">{rounds}",
+    )
+    emit(
+        "telemetry/rounds_to_85/agrees_with_history",
+        0.0,
+        s["rounds_to_target"] == hist.rounds_to_target,
+    )
+    emit("telemetry/jsonl", 0.0, "BENCH_telemetry.jsonl")
 
 
 def _best_us_interleaved(fn_a, fn_b, reps: int):
@@ -559,6 +610,7 @@ BENCHES = {
     "engine": engine_ab,
     "transport": transport_sweep,
     "driver": driver_ab,
+    "telemetry": telemetry_bench,
     "roofline": roofline_table,
 }
 
@@ -573,7 +625,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in names:
         kwargs = {"full": args.full}
-        if name in ("engine", "transport", "driver"):
+        if name in ("engine", "transport", "driver", "telemetry"):
             kwargs["tiny"] = args.tiny
         BENCHES[name](**kwargs)
 

@@ -1,0 +1,62 @@
+"""Summarize a telemetry JSONL stream (repro.telemetry schema).
+
+Reproduces a run's headline numbers — rounds run, final accuracy,
+rounds-to-target — from the stream ALONE (no checkpoint, no rerun), plus
+per-span wall-clock percentiles and, with --nodes, each node's FedAdp
+angle/weight trajectory. `--validate` checks every event against the
+versioned schema; `--assert-weight-sums` checks the softmax invariant
+(each round's node weights sum to 1) — CI runs both on every stream a
+smoke job produces.
+
+Usage:
+  python scripts/flstat.py RUN_DIR/telemetry.jsonl
+  python scripts/flstat.py BENCH_telemetry.jsonl --target 0.85 \
+      --validate --assert-weight-sums --nodes
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.telemetry import report, schema  # noqa: E402
+from repro.telemetry.sinks import load_events  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="summarize a repro.telemetry JSONL stream")
+    ap.add_argument("path", help="telemetry .jsonl file")
+    ap.add_argument("--target", type=float, default=0.85,
+                    help="accuracy target for rounds-to-target "
+                         "(default: the paper's 0.85)")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check every event; non-zero exit on "
+                         "violation")
+    ap.add_argument("--assert-weight-sums", action="store_true",
+                    help="assert each round's node weights sum to 1 "
+                         "(1e-5); non-zero exit on violation")
+    ap.add_argument("--nodes", action="store_true",
+                    help="per-node trajectory lines")
+    args = ap.parse_args(argv)
+
+    events = load_events(args.path)
+    try:
+        if args.validate:
+            counts = schema.validate_events(events)
+            print("valid:",
+                  " ".join(f"{k}={v}" for k, v in counts.items() if v))
+        if args.assert_weight_sums:
+            n = report.check_weight_sums(events)
+            print(f"weight sums ok ({n} rounds)")
+    except ValueError as e:
+        print(f"flstat: {e}", file=sys.stderr)
+        return 1
+    print(report.format_summary(report.summarize(events, args.target),
+                                per_node=args.nodes))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

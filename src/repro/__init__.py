@@ -29,15 +29,29 @@ from repro.core.server import (  # noqa: F401
     History,
     fixed_arrival_schedule,
 )
+from repro import telemetry  # noqa: F401
+from repro.telemetry.manifest import run_manifest  # noqa: F401
+from repro.telemetry.sinks import (  # noqa: F401
+    CSVSink,
+    JSONLSink,
+    MemorySink,
+)
+from repro.telemetry.spans import SpanTimer  # noqa: F401
 
 __all__ = [
+    "CSVSink",
     "FLConfig",
     "FedServer",
     "History",
+    "JSONLSink",
+    "MemorySink",
     "RoundState",
+    "SpanTimer",
     "fixed_arrival_schedule",
     "init_round_state",
     "make_round_fn",
+    "run_manifest",
     "state_from_tree",
     "state_to_tree",
+    "telemetry",
 ]

@@ -44,8 +44,16 @@ import numpy as np
 from repro.checkpoint import io as ckpt_io
 from repro.core import buffer as buffer_mod
 from repro.core import fl as fl_mod
+from repro.telemetry import schema as tel_schema
+from repro.telemetry import sinks as tel_sinks
+from repro.telemetry import spans as tel_spans
 
 PyTree = Any
+
+# the in-scan eval fill value for rounds where the lax.cond-gated eval
+# did not run — owned by the telemetry schema so sinks/flstat mask the
+# SAME constant the compiled step writes (never ingest it as data).
+EVAL_SENTINEL = tel_schema.EVAL_SENTINEL
 
 
 class ClientData(NamedTuple):
@@ -203,9 +211,11 @@ def make_step_fn(loss_fn: Callable, fl: fl_mod.FLConfig, data: ClientData,
     compiled round, and (when `eval_fn` is given) conditionally append
     `metrics["accuracy"]` — evaluated only after rounds where
     round % eval_every == 0 post-increment (i.e. (r+1) % eval_every == 0),
-    -1.0 otherwise, so the eval forward pass is skipped via `lax.cond` on
-    non-eval rounds. `eval_every` is a traced i32 (0 disables eval
-    without recompiling).
+    the named `EVAL_SENTINEL` (-1.0) otherwise, so the eval forward pass
+    is skipped via `lax.cond` on non-eval rounds. `eval_every` is a
+    traced i32 (0 disables eval without recompiling). Sinks and
+    `scripts/flstat.py` mask the sentinel; host code must test
+    `acc != EVAL_SENTINEL` rather than reinvent the fill value.
 
     The SAME function is the stepwise server's jitted step and the
     scanned driver's scan body — equivalence by construction.
@@ -236,7 +246,8 @@ def make_step_fn(loss_fn: Callable, fl: fl_mod.FLConfig, data: ClientData,
         if eval_fn is not None:
             do_eval = (eval_every > 0) & (state.round % eval_every == 0)
             acc = jax.lax.cond(do_eval, eval_fn,
-                               lambda p: jnp.float32(-1.0), state.params)
+                               lambda p: jnp.float32(EVAL_SENTINEL),
+                               state.params)
             metrics = dict(metrics, accuracy=acc)
         return state, metrics
 
@@ -269,7 +280,9 @@ def make_scan_runner(step_fn: Callable, donate: Optional[bool] = None):
 def run_rounds(run_block: Callable, state: fl_mod.RoundState, rounds: int,
                *, eval_every: int = 1, target_acc: Optional[float] = None,
                block: int = 8, ckpt_dir: Optional[str] = None,
-               ckpt_every_blocks: int = 1, ckpt_keep: int = 3):
+               ckpt_every_blocks: int = 1, ckpt_keep: int = 3,
+               sink=None, telemetry_every: int = 1,
+               spans: Optional[tel_spans.SpanTimer] = None):
     """Chunked scan over rounds with host-side early exit and optional
     block-boundary checkpointing.
 
@@ -291,17 +304,32 @@ def run_rounds(run_block: Callable, state: fl_mod.RoundState, rounds: int,
     loses at most `ckpt_every_blocks * block` rounds and restores
     bit-exactly (fl.state_from_tree) at a block boundary.
 
+    `sink` (a `telemetry.sinks.TelemetrySink`) receives schema events at
+    every scan-block boundary — one ``round`` event per round run (the
+    final partial block is exact-length, never padded, so no de-padding
+    ambiguity reaches the stream) plus per-node rows when the config's
+    `telemetry="node"` metrics are present; `telemetry_every` subsamples
+    the emitted rounds. `spans` (a `telemetry.spans.SpanTimer`; one is
+    created over `sink` when omitted) bounds each block dispatch +
+    device_get as a ``scan_block`` span, checkpoint writes as
+    ``checkpoint``, and event emission as ``sink_emit`` — the
+    wall-clock-per-round numbers flstat reports come from these.
+
     Returns (state, metrics, rounds_to_target, rounds_run) where metrics
     holds per-round host arrays stacked over every round run THIS call
     (`rounds_run` counts the same; rounds_to_target is absolute).
     """
     base = int(jax.device_get(state.round))
     saved_at = None
+    if spans is None:
+        spans = tel_spans.SpanTimer(sink)
 
     def checkpoint(round_now):
         nonlocal saved_at
-        ckpt_io.save_checkpoint(ckpt_dir, round_now,
-                                fl_mod.state_to_tree(state), keep=ckpt_keep)
+        with spans.span("checkpoint", round=round_now):
+            ckpt_io.save_checkpoint(ckpt_dir, round_now,
+                                    fl_mod.state_to_tree(state),
+                                    keep=ckpt_keep)
         saved_at = round_now
 
     blocks = []
@@ -310,9 +338,15 @@ def run_rounds(run_block: Callable, state: fl_mod.RoundState, rounds: int,
     rounds_to_target = None
     while done < rounds and rounds_to_target is None:
         length = min(block, rounds - done)
-        state, ms = run_block(state, jnp.int32(eval_every), length=length)
-        ms = jax.device_get(ms)
+        with spans.span("scan_block", round=base + done):
+            state, ms = run_block(state, jnp.int32(eval_every),
+                                  length=length)
+            ms = jax.device_get(ms)
         blocks.append(ms)
+        if sink is not None:
+            with spans.span("sink_emit", round=base + done):
+                tel_sinks.emit_round_block(sink, ms, base + done,
+                                           every=telemetry_every)
         if target_acc is not None and "accuracy" in ms:
             hit = np.flatnonzero(np.asarray(ms["accuracy"]) >= target_acc)
             if hit.size:

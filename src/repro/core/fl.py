@@ -184,6 +184,18 @@ class FLConfig:
     straggle_prob: float = 0.0
     straggle_max: int = 1
     dropout_prob: float = 0.0
+    # Round-level telemetry (repro.telemetry). None (default) is the
+    # zero-overhead off path: the metrics dict — and therefore the
+    # compiled step's jaxpr — is byte-identical to a telemetry-free
+    # build. "node" makes every engine's metrics dict additionally carry
+    # the per-node FedAdp internals under flat "tel/*" keys (they stack
+    # naturally under lax.scan): "tel/nodes" (K,) population attribution
+    # for this round's theta/weights rows, "tel/cohort" (num_clients,)
+    # selected mask, "tel/weight_entropy", and the wire cost
+    # "tel/bytes_up"/"tel/bytes_down" (transport.round_bytes); buffered
+    # mode adds "tel/ages", "tel/landed", and "tel/occupancy". The
+    # host-side adapter is telemetry.sinks.emit_round_block.
+    telemetry: Optional[str] = None  # None | "node"
 
     def validate(self) -> "FLConfig":
         """Check the config's cross-field invariants in one place.
@@ -205,6 +217,11 @@ class FLConfig:
             raise ValueError(f"unknown engine {self.engine!r}")
         if self.angle_filter not in ("all", "dense_only"):
             raise ValueError(f"unknown angle_filter {self.angle_filter!r}")
+        if self.telemetry not in (None, "node"):
+            raise ValueError(
+                f"unknown telemetry {self.telemetry!r} (expected None — "
+                "the zero-overhead off path — or 'node' for per-node "
+                "round metrics)")
         if self.transport not in transport_mod.TRANSPORTS:
             raise ValueError(
                 f"unknown transport {self.transport!r} (expected one of "
@@ -671,6 +688,42 @@ def _resolve_interpret(fl: FLConfig) -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _weight_entropy(w):
+    """Shannon entropy of the (re-normalized) aggregation weights — a
+    one-scalar collapse detector: ln K under FedAvg-with-equal-sizes,
+    falling toward 0 as the Gompertz softmax concentrates on few nodes.
+    Zero-sum rows (buffered non-flush ticks) report 0."""
+    tot = jnp.sum(w)
+    p = w / jnp.maximum(tot, 1e-12)
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-38)), 0.0))
+    return jnp.where(tot > 0, h, 0.0)
+
+
+def _telemetry_metrics(fl: FLConfig, params, node_ids, w, occupied=None):
+    """The `FLConfig(telemetry="node")` metric extension — ONE helper
+    shared by all engines and both aggregation disciplines, so the tel/*
+    key set cannot fork between them. `node_ids` attributes this round's
+    theta/weights rows to population slots (sel_idx for sync rounds, the
+    report buffer's slot column for buffered ticks); `occupied` masks
+    rows that hold a live report (buffered; None = all rows live). The
+    wire bytes are static per config (transport.round_bytes) and ride as
+    constants so a telemetry stream is self-describing."""
+    n = param_count(params)
+    rb = transport_mod.round_bytes(fl.clients_per_round, n, fl.transport,
+                                   fl.downlink, group_size=fl.group_size)
+    live_ids = (node_ids if occupied is None
+                else jnp.where(occupied, node_ids, fl.num_clients))
+    cohort = (jnp.zeros((fl.num_clients,), bool)
+              .at[live_ids].set(True, mode="drop"))
+    return {
+        "tel/nodes": jnp.asarray(node_ids, jnp.int32),
+        "tel/cohort": cohort,
+        "tel/weight_entropy": _weight_entropy(w),
+        "tel/bytes_up": jnp.float32(rb["up"]),
+        "tel/bytes_down": jnp.float32(rb["down"]),
+    }
+
+
 def _pad_rows(a, kp: int, fill=0.0):
     """Pad axis 0 to kp rows with a constant (client-axis shard padding)."""
     k = a.shape[0]
@@ -901,6 +954,8 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             "cos": jnp.cos(theta),
             "expected_contribution": weighting.expected_contribution(w, jnp.cos(theta)),
         }
+        if fl.telemetry:
+            metrics.update(_telemetry_metrics(fl, params, sel_idx, w))
         return state._replace(
             params=new_params, angle=new_state, prev_delta=g_avg,
             ef=new_ef, dl_ef=new_dl, prev_broadcast=new_bcast,
@@ -1156,6 +1211,16 @@ def _make_buffered_round(loss_fn, fl: FLConfig, delta_constraint,
             "staleness": jnp.sum(jnp.where(landed, buf.age, 0)
                                  .astype(jnp.float32)) / nl_f,
         }
+        if fl.telemetry:
+            # attribution follows the BUFFER rows (theta/weights are
+            # computed over them), not this tick's candidates; ages and
+            # the landed mask are per-row, occupancy counts live slots.
+            metrics.update(_telemetry_metrics(fl, params, buf.slot, w,
+                                              occupied=~buf.free))
+            metrics["tel/ages"] = buf.age
+            metrics["tel/landed"] = landed
+            metrics["tel/occupancy"] = jnp.sum((~buf.free)
+                                               .astype(jnp.int32))
         return state._replace(
             params=new_params, angle=new_angle, prev_delta=new_prev,
             ef=new_ef, dl_ef=new_dl, prev_broadcast=new_bcast,
@@ -1243,6 +1308,8 @@ def _make_sequential_round(loss_fn, fl: FLConfig, angle_pred=None,
             "divergence": div, "lr": lr, "cos": jnp.cos(theta),
             "expected_contribution": weighting.expected_contribution(w, jnp.cos(theta)),
         }
+        if fl.telemetry:
+            metrics.update(_telemetry_metrics(fl, params, sel_idx, w))
         return state._replace(
             params=new_params, angle=new_state, prev_delta=g_acc,
             round=state.round + 1,

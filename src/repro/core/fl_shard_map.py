@@ -40,6 +40,13 @@ this region included — inside `lax.scan`).
 Works on any mesh whose client axis is "data" (+"pod") and whose tensor
 axes follow models/sharding.param_pspecs; on a 1x1 host mesh it reduces to
 plain math (used by the CPU equivalence test).
+
+Telemetry contract: the per-client quantities this schedule produces
+(theta, smoothed theta, softmax weights) leave the shard_map region
+replicated, so the `FLConfig(telemetry="node")` tel/* metrics built from
+them in core/fl.py are exact per-node rows — identical across shards and
+matching the unsharded engines to 1e-5 (pinned by tests/test_telemetry.py's
+8-device subprocess leg).
 """
 from __future__ import annotations
 

@@ -33,6 +33,8 @@ from repro.core import driver as driver_mod
 from repro.core import fl as fl_mod
 from repro.data.synthetic import Dataset
 from repro.models import small
+from repro.telemetry import schema as tel_schema
+from repro.telemetry import sinks as tel_sinks
 
 
 def fixed_arrival_schedule(delays, drops):
@@ -165,7 +167,8 @@ class FedServer:
             eval_every: int = 1, *, mode: str = "stepwise",
             verbose: bool = False, block: int = 8,
             ckpt_dir: Optional[str] = None, ckpt_every_blocks: int = 1,
-            ckpt_keep: int = 3) -> History:
+            ckpt_keep: int = 3, sink=None,
+            telemetry_every: int = 1) -> History:
         """Train for `rounds` rounds; the single public run surface.
 
         mode="stepwise" dispatches one jitted step per round (the
@@ -180,40 +183,60 @@ class FedServer:
         entries stop at rounds_to_target, which is the ABSOLUTE round
         index (eval cadence stays phased on `state.round` when resuming
         a mid-run state).
+
+        `sink` (a `repro.telemetry` TelemetrySink) streams the run as
+        schema events — manifest first, one ``round`` event per round
+        (subsampled by `telemetry_every`), per-node FedAdp rows when the
+        config has `telemetry="node"`, and a ``summary`` last. Both
+        modes feed the sink through the same adapter
+        (`telemetry.sinks.emit_round_block`), so the streams are
+        comparable to 1e-5 — a pinned test, not a hope.
         """
+        if mode not in ("stepwise", "scanned"):
+            raise ValueError(
+                f"unknown mode {mode!r} (expected 'stepwise' or 'scanned')")
+        if sink is not None:
+            tel_sinks.emit_manifest(sink, self.fl)
+        start = int(self.state.round)
         if mode == "stepwise":
             hist = History([], [], [], None, 0.0, [], [])
             for r in range(rounds):
                 m = self.step(eval_every=eval_every)
                 self._append(hist, m)
+                if sink is not None:
+                    tel_sinks.emit_round_block(sink, m, start + r,
+                                               every=telemetry_every)
                 acc = float(m["accuracy"])
-                if acc >= 0.0:
+                if tel_schema.is_real_accuracy(acc):
                     hist.accuracy.append(acc)
                     if verbose:
                         print(f"round {r+1:4d} loss {m['loss']:.4f} "
                               f"acc {acc:.4f}")
                     if (target_acc and acc >= target_acc
                             and hist.rounds_to_target is None):
-                        hist.rounds_to_target = r + 1
+                        hist.rounds_to_target = start + r + 1
                         break
             hist.final_accuracy = hist.accuracy[-1] if hist.accuracy else 0.0
-            return hist
-        if mode != "scanned":
-            raise ValueError(
-                f"unknown mode {mode!r} (expected 'stepwise' or 'scanned')")
-        start = int(self.state.round)
-        self.state, ms, rtt, ran = driver_mod.run_rounds(
-            self._run_block, self.state, rounds, eval_every=eval_every,
-            target_acc=target_acc, block=block, ckpt_dir=ckpt_dir,
-            ckpt_every_blocks=ckpt_every_blocks, ckpt_keep=ckpt_keep)
-        hist = History([], [], [], rtt, 0.0, [], [])
-        stop = rtt - start if rtt is not None else ran
-        for r in range(stop):
-            self._append(hist, {k: v[r] for k, v in ms.items()})
-            acc = float(ms["accuracy"][r])
-            if acc >= 0.0:
-                hist.accuracy.append(acc)
-        hist.final_accuracy = hist.accuracy[-1] if hist.accuracy else 0.0
+        else:
+            self.state, ms, rtt, ran = driver_mod.run_rounds(
+                self._run_block, self.state, rounds, eval_every=eval_every,
+                target_acc=target_acc, block=block, ckpt_dir=ckpt_dir,
+                ckpt_every_blocks=ckpt_every_blocks, ckpt_keep=ckpt_keep,
+                sink=sink, telemetry_every=telemetry_every)
+            hist = History([], [], [], rtt, 0.0, [], [])
+            stop = rtt - start if rtt is not None else ran
+            for r in range(stop):
+                self._append(hist, {k: v[r] for k, v in ms.items()})
+                acc = float(ms["accuracy"][r])
+                if tel_schema.is_real_accuracy(acc):
+                    hist.accuracy.append(acc)
+            hist.final_accuracy = hist.accuracy[-1] if hist.accuracy else 0.0
+        if sink is not None:
+            tel_sinks.emit_summary(
+                sink, rounds=int(self.state.round) - start,
+                final_accuracy=hist.final_accuracy or None,
+                rounds_to_target=hist.rounds_to_target,
+                target_acc=target_acc)
         return hist
 
     _warned_run_scanned = False

@@ -59,7 +59,8 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: shapes_mod.InputShape,
                      mqa_replicate_kv: bool = False,
                      ssm_unroll: int = 0, loss_chunk: int = 0,
                      rs_grads: bool = False, ssm_stream_bf16: bool = False,
-                     act_constrain: bool = False, moe_combine_bf16: bool = False):
+                     act_constrain: bool = False, moe_combine_bf16: bool = False,
+                     telemetry: str | None = None):
     import dataclasses
 
     if q_chunk:
@@ -90,9 +91,12 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: shapes_mod.InputShape,
     def loss(params, batch):
         return loss_fn(params, batch=batch)
 
+    # telemetry=None keeps the lowered step's jaxpr telemetry-free;
+    # "node" adds the per-node tel/* metrics (repro.telemetry) and flows
+    # through meta["flcfg"] so runtime state rebuilds see it too.
     flcfg = fl_mod.FLConfig(
         num_clients=K, clients_per_round=K, local_steps=tau, method=method,
-        mode=fl_mode, stale_angles=stale,
+        mode=fl_mode, stale_angles=stale, telemetry=telemetry,
     )
 
     p_sds = params_sds(cfg)

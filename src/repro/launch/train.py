@@ -43,9 +43,20 @@ def main() -> None:
                     help="resume from the latest checkpoint in --ckpt; "
                          "training continues bit-exactly at the saved "
                          "round (--rounds is the TOTAL round budget)")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="stream round/node/span telemetry to "
+                         "DIR/telemetry.jsonl (repro.telemetry JSONL "
+                         "schema; summarize with scripts/flstat.py). "
+                         "Builds the step with FLConfig(telemetry='node') "
+                         "— omit for the telemetry-free jaxpr")
+    ap.add_argument("--telemetry-every", type=int, default=1, metavar="N",
+                    help="emit round/node events only every N rounds "
+                         "(spans and manifest always emit)")
     args = ap.parse_args()
     if args.resume and not args.ckpt:
         ap.error("--resume needs --ckpt (the directory to resume from)")
+    if args.telemetry_every < 1:
+        ap.error("--telemetry-every must be >= 1")
 
     import dataclasses
     import hashlib
@@ -75,12 +86,25 @@ def main() -> None:
     fn, sds, in_shard, out_shard, meta = steps.build_train_step(
         cfg, mesh, shape, method=args.method, stale=args.stale,
         local_steps=args.tau,
+        telemetry="node" if args.telemetry else None,
     )
     K, B, tau = meta["K"], meta["B"], meta["tau"]
     print(f"arch={cfg.name} mode={meta['fl_mode']} K={K} B={B} tau={tau} "
           f"T={shape.seq_len} mesh={dict(mesh.shape)}")
 
     from repro.checkpoint import io as ckpt_io
+    from repro.telemetry import report as tel_report
+    from repro.telemetry import sinks as tel_sinks
+    from repro.telemetry import spans as tel_spans
+
+    sink = None
+    spans = tel_spans.SpanTimer()
+    if args.telemetry:
+        import os
+
+        sink = tel_sinks.JSONLSink(os.path.join(args.telemetry,
+                                                "telemetry.jsonl"))
+        spans = tel_spans.SpanTimer(sink)
 
     with mesh:
         step = jax.jit(fn, in_shardings=in_shard, out_shardings=out_shard)
@@ -103,10 +127,16 @@ def main() -> None:
         state = jax.device_put(state, in_shard[0])
         sel = jnp.arange(K, dtype=jnp.int32)
         sizes = jnp.ones((K,))
+        if sink is not None:
+            tel_sinks.emit_manifest(sink, flcfg,
+                                    extra={"arch": cfg.name,
+                                           "mesh": dict(mesh.shape),
+                                           "start_round": start})
 
         def checkpoint(round_no: int) -> None:
-            ckpt_io.save_checkpoint(args.ckpt, round_no,
-                                    repro.state_to_tree(state))
+            with spans.span("checkpoint", round=round_no):
+                ckpt_io.save_checkpoint(args.ckpt, round_no,
+                                        repro.state_to_tree(state))
             print(f"checkpoint -> {args.ckpt} @ round {round_no}")
 
         for r in range(start, args.rounds):
@@ -121,9 +151,14 @@ def main() -> None:
                 if k2 != "tokens":
                     batch[k2] = jnp.zeros(spec.shape, spec.dtype)
             t0 = time.time()
-            state, m = step(state, batch, sel, sizes)
+            with spans.span("round", round=r + 1):
+                state, m = step(state, batch, sel, sizes)
+                m = jax.device_get(m)
             print(f"round {r:4d} loss {float(m['loss']):.4f} "
                   f"div {float(m['divergence']):.3f} ({time.time()-t0:.1f}s)")
+            if sink is not None:
+                tel_sinks.emit_round_block(sink, m, r,
+                                           every=args.telemetry_every)
             if (args.ckpt and args.ckpt_every
                     and (r + 1) % args.ckpt_every == 0):
                 checkpoint(r + 1)
@@ -133,6 +168,12 @@ def main() -> None:
         for leaf in jax.tree.leaves(jax.device_get(state.params)):
             h.update(np.ascontiguousarray(leaf).tobytes())
         print("params_sha256", h.hexdigest())
+        if sink is not None:
+            tel_sinks.emit_summary(sink, rounds=args.rounds - start)
+            sink.close()
+            s = tel_report.summarize(tel_sinks.load_events(sink.path))
+            print(f"telemetry -> {sink.path}")
+            print(tel_report.oneline(s))
 
 
 if __name__ == "__main__":

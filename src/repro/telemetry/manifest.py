@@ -1,0 +1,94 @@
+"""Run-manifest: the provenance header every telemetry stream and bench
+artifact carries.
+
+`run_manifest()` collects what is needed to compare two artifacts across
+commits and machines: the telemetry schema version, an ISO-8601 UTC
+timestamp, the git commit of the working tree (best-effort), the jax
+version, the device topology (backend, count, kind), and — when a config
+is given — its JSON-safe dict plus a stable sha256 hash, so "same
+config?" is one string comparison. `benchmarks/run.py` embeds the same
+manifest in every ``BENCH_*.json`` and the JSONL sinks write it as the
+stream's first event.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import subprocess
+from datetime import datetime, timezone
+from typing import Any, Optional
+
+from repro.telemetry import schema
+
+
+def git_commit(cwd: Optional[str] = None) -> Optional[str]:
+    """Current commit hash (with a ``-dirty`` suffix when the tree has
+    uncommitted changes), or None outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=10)
+        if out.returncode != 0:
+            return None
+        commit = out.stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=cwd, capture_output=True,
+            text=True, timeout=10)
+        if dirty.returncode == 0 and dirty.stdout.strip():
+            commit += "-dirty"
+        return commit
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def config_dict(cfg: Any) -> Any:
+    """A JSON-safe view of a config (dataclasses become dicts)."""
+    if cfg is None:
+        return None
+    if dataclasses.is_dataclass(cfg) and not isinstance(cfg, type):
+        cfg = dataclasses.asdict(cfg)
+    return cfg
+
+
+def config_hash(cfg: Any) -> Optional[str]:
+    """Stable sha256 of the config's sorted-key JSON (None for None)."""
+    d = config_dict(cfg)
+    if d is None:
+        return None
+    blob = json.dumps(d, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def run_manifest(cfg: Any = None, extra: Optional[dict] = None) -> dict:
+    """The ``manifest`` telemetry event (see `telemetry.schema`).
+
+    Imports jax lazily so readers (flstat on a laptop) can build
+    manifests of their own without a jax install.
+    """
+    try:
+        import jax
+
+        devices = jax.devices()
+        jax_info = {
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "device_kind": devices[0].device_kind if devices else None,
+        }
+    except Exception:  # no jax / no backend — still a valid manifest
+        jax_info = {"jax_version": "unavailable", "backend": "none",
+                    "device_count": 0, "device_kind": None}
+    ev = {
+        "event": "manifest",
+        "schema": schema.SCHEMA_VERSION,
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "git_commit": git_commit(os.path.dirname(os.path.abspath(__file__))),
+        **jax_info,
+        "config": config_dict(cfg),
+        "config_hash": config_hash(cfg),
+    }
+    if extra:
+        ev["extra"] = dict(extra)
+    return ev

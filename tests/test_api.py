@@ -26,15 +26,21 @@ from repro.data import synthetic
 
 def test_facade_all_is_pinned():
     assert repro.__all__ == [
+        "CSVSink",
         "FLConfig",
         "FedServer",
         "History",
+        "JSONLSink",
+        "MemorySink",
         "RoundState",
+        "SpanTimer",
         "fixed_arrival_schedule",
         "init_round_state",
         "make_round_fn",
+        "run_manifest",
         "state_from_tree",
         "state_to_tree",
+        "telemetry",
     ]
     for name in repro.__all__:
         assert getattr(repro, name) is not None
@@ -54,7 +60,8 @@ def test_run_signature_is_pinned():
     params = list(sig.parameters)
     assert params == ["self", "rounds", "target_acc", "eval_every",
                       "mode", "verbose", "block", "ckpt_dir",
-                      "ckpt_every_blocks", "ckpt_keep"]
+                      "ckpt_every_blocks", "ckpt_keep", "sink",
+                      "telemetry_every"]
     p = sig.parameters
     assert p["mode"].kind is inspect.Parameter.KEYWORD_ONLY
     assert p["mode"].default == "stepwise"
