@@ -43,6 +43,8 @@ def run_fl(
     transport: str = "f32",
     downlink: str = "f32",
     downlink_delta: bool = False,
+    downlink_ring: int = 8,
+    clients_per_round: int | None = None,
     group_size: int = 512,
     mesh=None,
     scan: bool = False,
@@ -72,16 +74,23 @@ def run_fl(
     `telemetry="node"` builds the config with per-node tel/* metrics and
     `sink` streams the TIMED run (warmup rounds never reach the sink) as
     repro.telemetry schema events, `telemetry_every` subsampling rounds.
+
+    `clients_per_round` defaults to full participation (every node of
+    `spec` selected every round); pass a smaller K for subset selection
+    — the regime where the per-client delta-downlink state matters.
     """
     train, test = get_task()
     nodes = synthetic.make_federated(train, spec, samples_per_node=samples,
                                      seed=seed + 1)
     n = len(spec)
     cfg = repro.FLConfig(
-        num_clients=n, clients_per_round=n, local_steps=samples // batch_size,
+        num_clients=n,
+        clients_per_round=n if clients_per_round is None else clients_per_round,
+        local_steps=samples // batch_size,
         method=method, alpha=alpha, base_lr=base_lr,
         engine=engine, transport=transport, downlink=downlink,
-        downlink_delta=downlink_delta, group_size=group_size,
+        downlink_delta=downlink_delta, downlink_ring=downlink_ring,
+        group_size=group_size,
         aggregation=aggregation, buffer_m=buffer_m,
         staleness_beta=staleness_beta, straggle_prob=straggle_prob,
         straggle_max=straggle_max, dropout_prob=dropout_prob,

@@ -272,8 +272,13 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
     BOTH directions of the wire (`transport.round_bytes`: bytes_up is the
     delta uplink incl. scale side data, bytes_down the model broadcast);
     a second sweep holds the uplink at int4 and walks the downlink
-    formats (f32 / bf16 / int8) at the first K. Everything lands in
-    BENCH_transport.json for the CI bench-smoke artifact.
+    formats (f32 / bf16 / int8) at the first K. A delta-downlink leg
+    then runs a rotating-cohort SUBSET-selection round (per-client
+    broadcast state, downlink_delta=True) and reports the ACTUAL
+    delta-vs-full down-byte split from the tel/bytes_down_* metrics —
+    the number the static broadcast figure over-states whenever clients
+    resync. Everything lands in BENCH_transport.json for the CI
+    bench-smoke artifact.
 
     Unless `tiny`, also pins convergence parity on the non-IID synthetic
     task (5 IID + 5 one-class nodes): rounds-to-target under the int8 and
@@ -380,6 +385,69 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
                 f"{down['int8'] / down['f32']:.4f}",
             )
 
+    # delta-downlink byte split: a short SUBSET-selection run (half the
+    # population per round) over the per-client broadcast state, with the
+    # actual per-round delta-vs-full down bytes read back from the
+    # tel/bytes_down_* metrics (resyncs pay a full quantized model; the
+    # static round_bytes broadcast figure is only the degenerate
+    # full-participation bound).
+    K = ks[0]
+    ksel = K // 2
+    cfg = repro.FLConfig(
+        num_clients=K,
+        clients_per_round=ksel,
+        local_steps=tau,
+        method="fedadp",
+        engine="flat",
+        transport="int4",
+        downlink="int8",
+        downlink_delta=True,
+        downlink_ring=2,
+        base_lr=0.05,
+        telemetry="node",
+    )
+    rf = jax.jit(repro.make_round_fn(loss_fn, cfg))
+    data = (
+        jnp.asarray(rng.normal(size=(ksel, tau, B, d)).astype(np.float32)),
+        jnp.asarray(rng.normal(size=(ksel, tau, B, 1)).astype(np.float32)),
+    )
+    sizes = jnp.ones((ksel,), jnp.float32)
+    state = repro.init_round_state(cfg, params)
+    delta_rounds, down_delta = [], 0.0
+    down_full = 0.0
+    T = 8
+    for t in range(T):
+        # rotate the cohort so clients fall behind and re-pull: the first
+        # pass pays full-model resyncs (never-pulled clients), later
+        # rounds pay multi-version delta catch-ups through the ring
+        sel = jnp.asarray([(t * ksel + i) % K for i in range(ksel)], jnp.int32)
+        state, metrics = rf(state, data, sel, sizes)
+        dd = float(metrics["tel/bytes_down_delta"])
+        df = float(metrics["tel/bytes_down_full"])
+        down_delta += dd
+        down_full += df
+        delta_rounds.append(
+            {"round": t, "bytes_down_delta": dd, "bytes_down_full": df}
+        )
+    static_down = transport_mod.round_bytes(ksel, n_params, "int4", "int8")["down"]
+    emit(
+        f"transport/delta_split/K={K}/sel={ksel}",
+        0.0,
+        f"delta={down_delta:.0f} full={down_full:.0f} "
+        f"static_down={static_down * T}",
+    )
+    delta_split = {
+        "K": K,
+        "clients_per_round": ksel,
+        "downlink_ring": 2,
+        "transport": "int4",
+        "downlink": "int8",
+        "rounds": delta_rounds,
+        "bytes_down_delta_total": down_delta,
+        "bytes_down_full_total": down_full,
+        "static_broadcast_down_total": static_down * T,
+    }
+
     convergence = None
     if not tiny:
         rounds = 120 if full else 60
@@ -435,6 +503,7 @@ def transport_sweep(full: bool = False, tiny: bool = False) -> None:
         "downlinks": list(transport_mod.DOWNLINKS),
         "manifest": run_manifest(),
         "records": records,
+        "downlink_delta": delta_split,
         "convergence": convergence,
     }
     with open("BENCH_transport.json", "w") as f:

@@ -15,6 +15,11 @@ pins both; tests/test_driver.py re-converges a subset through the
 scanned path.
 
 Usage:  PYTHONPATH=src python scripts/gen_golden_convergence.py
+        PYTHONPATH=src python scripts/gen_golden_convergence.py --only-delta
+
+`--only-delta` recomputes just the subset-selection delta-downlink
+section and merges it into the committed JSON, leaving the full-
+participation `entries`/`buffered` sections byte-identical.
 """
 import json
 import os
@@ -65,6 +70,23 @@ TASK_BUFFERED = {
 
 # buffered wires: the reference and the fully-compressed pair
 BUFFERED_WIRES = [("f32", "f32"), ("int4", "int8")]
+
+# The delta-downlink sibling claim: same task under 5-of-10 SUBSET
+# selection (clients_per_round=5) — the regime where the per-client
+# broadcast state (RoundState.bcast: delta ring + last-pulled versions
+# + catch-up resync) actually carries state between rounds. Each method
+# gets an f32/f32 reference under the same subset selection plus every
+# delta wire pair; acceptance mirrors the sync table (fedadp <= fedavg,
+# per-wire ratio <= 1.1 vs the same-method reference).
+TASK_DELTA = {
+    **TASK,
+    "max_rounds": 120,
+    "clients_per_round": 5,
+    "downlink_ring": 8,
+}
+
+# delta wires: downlink_delta=True pairs (downlink never accepts int4)
+DELTA_WIRES = [("f32", "bf16"), ("f32", "int8"), ("int4", "int8")]
 
 
 def buffered_arrival_fn(task=TASK_BUFFERED):
@@ -118,19 +140,53 @@ def run_buffered():
     return entries
 
 
+def run_delta():
+    entries = {}
+    spec = node_spec(5, 5, 1)
+    t = TASK_DELTA
+    for method in ("fedavg", "fedadp"):
+        # same-method reference: plain f32 broadcast, same subset selection
+        wires = [("f32", "f32", False)] + [(u, d, True) for u, d in DELTA_WIRES]
+        for uplink, downlink, delta in wires:
+            hist, _ = run_fl(
+                method, spec, rounds=t["max_rounds"], target=t["target"],
+                engine=t["engine"], transport=uplink, downlink=downlink,
+                downlink_delta=delta, downlink_ring=t["downlink_ring"],
+                group_size=t["group_size"], seed=t["seed"],
+                eval_every=t["eval_every"],
+                clients_per_round=t["clients_per_round"],
+            )
+            key = f"{method}/{uplink}/{downlink}"
+            entries[key] = hist.rounds_to_target
+            print(f"delta {key}: {hist.rounds_to_target}", flush=True)
+    return entries
+
+
 def main():
     import jax
 
-    entries = run_matrix()
-    payload = {
-        "task": TASK,
-        "metric": "rounds_to_target_accuracy",
-        "generated_with_jax": jax.__version__,
-        "entries": entries,
-        "buffered": {
-            "task": TASK_BUFFERED,
-            "entries": run_buffered(),
-        },
+    only_delta = "--only-delta" in sys.argv[1:]
+    if only_delta:
+        # Recompute ONLY the subset-selection delta section; every other
+        # key of the committed golden (entries, buffered, task, ...) is
+        # carried over verbatim so its pinned values cannot drift.
+        with open(GOLDEN_PATH) as f:
+            payload = json.load(f)
+    else:
+        payload = {
+            "task": TASK,
+            "metric": "rounds_to_target_accuracy",
+            "generated_with_jax": jax.__version__,
+            "entries": run_matrix(),
+            "buffered": {
+                "task": TASK_BUFFERED,
+                "entries": run_buffered(),
+            },
+        }
+    payload["delta"] = {
+        "task": TASK_DELTA,
+        "wires": [list(w) for w in DELTA_WIRES],
+        "entries": run_delta(),
     }
     os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
     with open(GOLDEN_PATH, "w") as f:

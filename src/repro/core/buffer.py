@@ -86,11 +86,19 @@ def draw_arrivals(key, k: int, straggle_prob: float, straggle_max: int,
     {1..straggle_max} for stragglers; drop marks reports lost in transit
     (never admitted). Deterministic in `key` — a fixed seed IS a fixed
     straggler/dropout schedule.
+
+    `straggle_max=0` means stragglers are impossible: every report lands
+    on time regardless of `straggle_prob` (matching `FLConfig.validate`'s
+    contract — it rejects straggle_prob > 0 with straggle_max == 0). The
+    key split is unchanged in that case, so the drop stream of a seeded
+    run does not depend on whether straggling is enabled.
     """
     kd, ks, ku = jax.random.split(key, 3)
     drop = jax.random.bernoulli(kd, dropout_prob, (k,))
+    if straggle_max < 1:
+        return jnp.zeros((k,), jnp.int32), drop
     straggle = jax.random.bernoulli(ks, straggle_prob, (k,))
-    delay = jax.random.randint(ku, (k,), 1, max(straggle_max, 1) + 1)
+    delay = jax.random.randint(ku, (k,), 1, straggle_max + 1)
     return jnp.where(straggle, delay, 0).astype(jnp.int32), drop
 
 

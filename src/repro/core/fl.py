@@ -119,17 +119,30 @@ class FLConfig:
     # aggregated delta to its own uncompressed master params.
     downlink: str = "f32"  # f32 | bf16 | int8
     # Delta-encode the broadcast: ship the quantized model DIFF against
-    # the previous round's reconstructed broadcast instead of the full
-    # model (`transport.downlink.delta_compress` on the raveled (1, N)
-    # diff). Per-round deltas are orders of magnitude smaller than the
-    # params themselves, so the same wire format reconstructs them far
-    # more accurately (the int8 scale tracks the diff's absmax, not the
+    # the previous broadcast reconstruction instead of the full model
+    # (`transport.downlink.delta_compress` on the raveled (1, N) diff).
+    # Per-round deltas are orders of magnitude smaller than the params
+    # themselves, so the same wire format reconstructs them far more
+    # accurately (the int8 scale tracks the diff's absmax, not the
     # model's). Requires downlink != "f32" (an exact broadcast has no
-    # reason to diff) and threads `RoundState.prev_broadcast` — the (N,)
-    # reconstruction every client saw last round, zeros at init so round
-    # 0 broadcasts the full model. Composes with downlink_error_feedback
-    # (the EF residual rides on the diff before compression).
+    # reason to diff) and threads `RoundState.bcast` — a
+    # `transport.downlink.BroadcastState` with the server's chain head,
+    # a `downlink_ring`-deep ring of the last delta reconstructions, and
+    # a per-client (num_clients,) last-pulled-version vector, so a
+    # selected (or buffered-admitted) client decodes against the base it
+    # ACTUALLY holds: it replays the ring's deltas since its last pull
+    # (bitwise the server head), or — if it never pulled / fell more
+    # than `downlink_ring` versions behind — receives a full quantized
+    # model instead (catch-up resync). Round 0 broadcasts the full model
+    # to everyone. Composes with downlink_error_feedback (the EF
+    # residual rides on the diff before compression).
     downlink_delta: bool = False
+    # Ring depth R of the per-client delta-downlink state: the server
+    # retains the delta reconstructions of the last R broadcast versions,
+    # so a client up to R versions stale can catch up by replaying
+    # deltas; staler clients pay a full-model resync. Memory is R * N
+    # f32 on device. Only meaningful with downlink_delta=True.
+    downlink_ring: int = 8
     # Carry the per-client quantization residual across rounds (EF-SGD) so
     # the compressed angle statistics stay unbiased over time. Requires
     # transport != "f32" and parallel mode; the residual lives in
@@ -248,6 +261,16 @@ class FLConfig:
                 "against the previous broadcast; downlink='f32' ships "
                 "exact params and has nothing to gain from it (set "
                 "downlink='bf16' or 'int8')")
+        if self.downlink_delta and self.downlink_ring < 1:
+            raise ValueError(
+                f"downlink_ring={self.downlink_ring} must be >= 1 (the "
+                "server retains the last R broadcast deltas; a client "
+                "more than R versions behind is resynced in full)")
+        if not self.downlink_delta and self.downlink_ring != 8:
+            raise ValueError(
+                f"downlink_ring={self.downlink_ring} requires "
+                "downlink_delta=True (without delta encoding every "
+                "broadcast ships the full model and no ring is kept)")
         if self.mode == "sequential":
             if self.engine != "tree":
                 raise ValueError(
@@ -334,8 +357,10 @@ class RoundState(NamedTuple):
     #   (the stale_angles reference; threaded untouched otherwise)
     ef: Optional[jax.Array] = None  # (num_clients, N) uplink EF residual
     dl_ef: Optional[jax.Array] = None  # (N,) downlink EF residual
-    prev_broadcast: Optional[jax.Array] = None  # (N,) last broadcast
-    #   reconstruction (downlink_delta; zeros -> round 0 ships the model)
+    bcast: Optional[transport_mod.downlink.BroadcastState] = None
+    #   per-client downlink-delta state (downlink_delta): the broadcast
+    #   chain head, the R-deep ring of the last delta reconstructions,
+    #   and each client's last-pulled version (see transport.downlink)
     buf: Optional[buffer_mod.ReportBuffer] = None  # buffered-async report
     #   buffer: (K, N) in-flight report rows + per-row staleness
     #   bookkeeping (aggregation="buffered"; see core.buffer)
@@ -354,7 +379,7 @@ def init_round_state(fl: FLConfig, params: PyTree,
     """Fresh RoundState for `params` under `fl`.
 
     Allocates exactly the optional buffers the config calls for (uplink
-    EF rows, downlink EF vector, previous-broadcast vector, buffered
+    EF rows, downlink EF vector, per-client broadcast state, buffered
     report buffer) so the state structure is a pure function of the
     config — `fl.validate()` runs first, so an inconsistent config fails
     here rather than at trace time. `seed` is an int (a new
@@ -371,8 +396,9 @@ def init_round_state(fl: FLConfig, params: PyTree,
             if fl.error_feedback else None),
         dl_ef=(transport_mod.downlink.init_downlink_error_feedback(n)
                if fl.downlink_error_feedback else None),
-        prev_broadcast=(transport_mod.downlink.init_prev_broadcast(n)
-                        if fl.downlink_delta else None),
+        bcast=(transport_mod.downlink.init_broadcast_state(
+            n, fl.num_clients, fl.downlink_ring)
+            if fl.downlink_delta else None),
         buf=(buffer_mod.init_report_buffer(fl.clients_per_round, n)
              if fl.aggregation == "buffered" else None),
         rng=rng,
@@ -395,21 +421,25 @@ def state_to_tree(state: RoundState) -> dict:
         "prev_delta": state.prev_delta,
         "ef": state.ef,
         "dl_ef": state.dl_ef,
-        "prev_broadcast": state.prev_broadcast,
+        "bcast": (None if state.bcast is None else state.bcast._asdict()),
         "buf": (None if state.buf is None else state.buf._asdict()),
         "rng": state.rng,
         "round": state.round,
     }
 
 
-def _resize_rows(a: jax.Array, k_new: int) -> jax.Array:
-    """Truncate / zero-pad axis 0 to `k_new` rows (elastic-K restore)."""
+def _resize_rows(a: jax.Array, k_new: int, fill=0) -> jax.Array:
+    """Truncate / pad axis 0 to `k_new` rows (elastic-K restore).
+
+    New rows are `fill` — zero for angle/EF state (fresh clients start
+    like round-0 clients), `downlink.NEVER_PULLED` for the broadcast
+    version vector (fresh clients need a full-model resync)."""
     k_old = a.shape[0]
     if k_new == k_old:
         return a
     if k_new < k_old:
         return a[:k_new]
-    pad = jnp.zeros((k_new - k_old,) + a.shape[1:], a.dtype)
+    pad = jnp.full((k_new - k_old,) + a.shape[1:], fill, a.dtype)
     return jnp.concatenate([a, pad])
 
 
@@ -417,19 +447,26 @@ def state_from_tree(cfg: FLConfig, tree: dict) -> RoundState:
     """Rebuild a RoundState from `state_to_tree`'s dict under `cfg`.
 
     The restored state's pytree structure is the CONFIG's — each optional
-    field (ef / dl_ef / prev_broadcast) must be present exactly when the
-    matching flag is on, and every leaf is validated (shape AND dtype)
-    against `init_round_state`'s template, so a checkpoint from a
-    different model or an incompatible config fails loudly instead of
-    mis-resuming.
+    field (ef / dl_ef / bcast) must be present exactly when the matching
+    flag is on, and every leaf is validated (shape AND dtype) against
+    `init_round_state`'s template, so a checkpoint from a different model
+    or an incompatible config fails loudly instead of mis-resuming.
 
     Elastic-K: when `cfg.num_clients` differs from the checkpoint's, the
-    per-client state is re-sized — AngleState rows and uplink-EF rows are
-    truncated (shrink) or zero-padded (grow). New clients therefore start
-    exactly like round-0 clients: zero EF residual, unseen angle
-    (smoothed=0, count=0). Departed clients' slots are dropped. The
-    per-model vectors (dl_ef, prev_broadcast) and params are K-independent
-    and restore bit-exactly.
+    per-client state is re-sized — AngleState rows, uplink-EF rows, and
+    the broadcast version vector `bcast.ver` are truncated (shrink) or
+    padded (grow). New clients therefore start exactly like round-0
+    clients: zero EF residual, unseen angle (smoothed=0, count=0), and a
+    `NEVER_PULLED` broadcast version (their first selection is a
+    full-model resync). Departed clients' slots are dropped. The
+    per-model state (dl_ef, params, the broadcast ring/head) is
+    K-independent and restores bit-exactly; a `downlink_ring` mismatch
+    fails the template shape check below.
+
+    Checkpoints from the pre-ring repo carried a single shared
+    'prev_broadcast' vector — per-client decode bases cannot be
+    reconstructed from it, so such trees are rejected with a pointed
+    error rather than silently mis-upgraded.
 
     Old-style raw `uint32` PRNG keys (pre-typed-key checkpoints) are
     wrapped back into a typed key via `jax.random.wrap_key_data` with the
@@ -441,10 +478,18 @@ def state_from_tree(cfg: FLConfig, tree: dict) -> RoundState:
         raise ValueError(
             f"checkpoint tree lacks required RoundState fields {missing} "
             "— was it written by fl.state_to_tree?")
+    if tree.get("prev_broadcast") is not None:
+        raise ValueError(
+            "checkpoint carries the legacy shared 'prev_broadcast' vector "
+            "— it was written by a pre-ring repo revision whose "
+            "downlink-delta state had no per-client decode bases; the "
+            "per-client BroadcastState (ring/head/ver) cannot be "
+            "reconstructed from it. Re-run the training (or restore under "
+            "the revision that wrote it)")
     for name, flag, want in (
             ("ef", "error_feedback", cfg.error_feedback),
             ("dl_ef", "downlink_error_feedback", cfg.downlink_error_feedback),
-            ("prev_broadcast", "downlink_delta", cfg.downlink_delta)):
+            ("bcast", "downlink_delta", cfg.downlink_delta)):
         have = tree.get(name) is not None
         if want and not have:
             raise ValueError(
@@ -482,6 +527,16 @@ def state_from_tree(cfg: FLConfig, tree: dict) -> RoundState:
     ef = tree.get("ef")
     if ef is not None:
         ef = _resize_rows(ef, cfg.num_clients)
+    bcast = tree.get("bcast")
+    if bcast is not None:
+        bcast = transport_mod.downlink.BroadcastState(
+            ring=jnp.asarray(bcast["ring"], jnp.float32),
+            head=jnp.asarray(bcast["head"], jnp.float32),
+            head_ver=jnp.asarray(bcast["head_ver"], jnp.int32),
+            ver=_resize_rows(jnp.asarray(bcast["ver"], jnp.int32),
+                             cfg.num_clients,
+                             fill=transport_mod.downlink.NEVER_PULLED),
+        )
     buf = tree.get("buf")
     if buf is not None:
         # in-flight reports restore verbatim (K = clients_per_round rows;
@@ -498,8 +553,7 @@ def state_from_tree(cfg: FLConfig, tree: dict) -> RoundState:
         )
     state = RoundState(
         params=params, angle=angle, prev_delta=tree["prev_delta"],
-        ef=ef, dl_ef=tree.get("dl_ef"),
-        prev_broadcast=tree.get("prev_broadcast"), buf=buf,
+        ef=ef, dl_ef=tree.get("dl_ef"), bcast=bcast, buf=buf,
         rng=rng, round=jnp.asarray(tree["round"], jnp.int32),
     )
 
@@ -625,8 +679,8 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
 
     `state` is a `RoundState` (see `init_round_state`) and is threaded
     IDENTICALLY through every engine — params, Eq. 9 angle state, the
-    previous aggregated delta, both EF residuals, the previous broadcast
-    (downlink_delta), the device RNG key (untouched here; the driver's
+    previous aggregated delta, both EF residuals, the per-client
+    broadcast state (downlink_delta), the device RNG key (untouched here; the driver's
     data pipeline owns it), and the round counter (incremented here; it
     drives the lr schedule). batches leaves: (K, tau, B, ...); sel_idx
     (K,) int32 population slots; data_sizes (K,) f32.
@@ -647,8 +701,13 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
     dequantized reconstruction; the aggregated delta is applied to the
     server's uncompressed master params), and `fl.transport` the client
     uplink ("int4" adds `fl.group_size`-wide grouped scales).
-    `fl.downlink_delta` broadcasts the compressed diff against
-    `state.prev_broadcast` instead of the full model.
+    `fl.downlink_delta` broadcasts the compressed diff against the
+    broadcast chain head carried in `state.bcast` instead of the full
+    model; `state.bcast` also tracks, per client, the last broadcast
+    version pulled plus an `fl.downlink_ring`-deep ring of delta
+    reconstructions, so a re-selected (or buffered-admitted) client
+    decodes against the base it actually holds and a client outside the
+    ring's reach is charged a full-model resync.
 
     When `angle_pred` is None, `fl.angle_filter` selects a built-in
     predicate ("dense_only" -> `moe_dense_only_pred`); an explicit
@@ -699,7 +758,8 @@ def _weight_entropy(w):
     return jnp.where(tot > 0, h, 0.0)
 
 
-def _telemetry_metrics(fl: FLConfig, params, node_ids, w, occupied=None):
+def _telemetry_metrics(fl: FLConfig, params, node_ids, w, occupied=None,
+                       down_split=None):
     """The `FLConfig(telemetry="node")` metric extension — ONE helper
     shared by all engines and both aggregation disciplines, so the tel/*
     key set cannot fork between them. `node_ids` attributes this round's
@@ -707,7 +767,12 @@ def _telemetry_metrics(fl: FLConfig, params, node_ids, w, occupied=None):
     report buffer's slot column for buffered ticks); `occupied` masks
     rows that hold a live report (buffered; None = all rows live). The
     wire bytes are static per config (transport.round_bytes) and ride as
-    constants so a telemetry stream is self-describing."""
+    constants so a telemetry stream is self-describing — EXCEPT under
+    downlink_delta, where the round builders pass `down_split` =
+    (delta_bytes, full_bytes): the ACTUAL per-round downlink cost (one
+    delta payload per version a pulling client is behind, or a
+    full-model resync), which replaces the static tel/bytes_down and
+    additionally rides as tel/bytes_down_delta / tel/bytes_down_full."""
     n = param_count(params)
     rb = transport_mod.round_bytes(fl.clients_per_round, n, fl.transport,
                                    fl.downlink, group_size=fl.group_size)
@@ -715,13 +780,40 @@ def _telemetry_metrics(fl: FLConfig, params, node_ids, w, occupied=None):
                 else jnp.where(occupied, node_ids, fl.num_clients))
     cohort = (jnp.zeros((fl.num_clients,), bool)
               .at[live_ids].set(True, mode="drop"))
-    return {
+    out = {
         "tel/nodes": jnp.asarray(node_ids, jnp.int32),
         "tel/cohort": cohort,
         "tel/weight_entropy": _weight_entropy(w),
         "tel/bytes_up": jnp.float32(rb["up"]),
         "tel/bytes_down": jnp.float32(rb["down"]),
     }
+    if down_split is not None:
+        down_delta, down_full = down_split
+        out["tel/bytes_down"] = down_delta + down_full
+        out["tel/bytes_down_delta"] = down_delta
+        out["tel/bytes_down_full"] = down_full
+    return out
+
+
+def _down_byte_split(fl: FLConfig, n: int, ver_rows, v, pulled=None):
+    """Actual downlink bytes for the clients pulling broadcast version
+    `v` given their last-pulled versions `ver_rows`: a delta-served
+    client pays one payload per version it is behind (delta and full
+    payloads cost the same `wire_bytes(1, n, downlink)` on the wire —
+    delta encoding buys reconstruction precision, not bytes); a resync
+    client pays one full-model payload. `pulled` masks the rows that
+    actually pulled this round (buffered admission; None = all).
+    Returns (delta_bytes, full_bytes) as f32 scalars."""
+    unit = transport_mod.wire_bytes(1, n, fl.downlink)
+    resync = transport_mod.downlink.resync_mask(ver_rows, v,
+                                                fl.downlink_ring)
+    payloads_d = jnp.where(resync, 0, v - ver_rows)
+    payloads_f = jnp.where(resync, 1, 0)
+    if pulled is not None:
+        payloads_d = jnp.where(pulled, payloads_d, 0)
+        payloads_f = jnp.where(pulled, payloads_f, 0)
+    return (jnp.sum(payloads_d).astype(jnp.float32) * unit,
+            jnp.sum(payloads_f).astype(jnp.float32) * unit)
 
 
 def _pad_rows(a, kp: int, fill=0.0):
@@ -755,11 +847,11 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
                 "fl.downlink_error_feedback=True: state.dl_ef is missing "
                 "— build the state with fl.init_round_state (or "
                 "transport.downlink.init_downlink_error_feedback)")
-        if fl.downlink_delta and state.prev_broadcast is None:
+        if fl.downlink_delta and state.bcast is None:
             raise ValueError(
-                "fl.downlink_delta=True: state.prev_broadcast is missing "
-                "— build the state with fl.init_round_state (or "
-                "transport.downlink.init_prev_broadcast)")
+                "fl.downlink_delta=True: state.bcast is missing — build "
+                "the state with fl.init_round_state (or "
+                "transport.downlink.init_broadcast_state)")
         params, angle_state = state.params, state.angle
         ef_state, dl_state = state.ef, state.dl_ef
         lr = _lr_at(fl, state.round)
@@ -770,14 +862,15 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
         # from the SAME dequantized reconstruction, so the three engines
         # cannot fork — the branch is upstream of all of them.
         params_srv = params
-        new_dl, new_bcast = dl_state, state.prev_broadcast
+        new_dl, new_bcast = dl_state, state.bcast
+        down_split = None
         if fl.downlink != "f32":
             pvec, punravel = treemath.tree_ravel(params)
             if fl.downlink_delta:
                 # delta encoding: compress the model DIFF against the
-                # reconstruction every client already holds — per-round
+                # chain head (the canonical reconstruction) — per-round
                 # diffs are small, so the quant scales track them tightly.
-                pvec = pvec - state.prev_broadcast
+                pvec = pvec - state.bcast.head
             if fl.downlink_error_feedback:
                 # EF-SGD mirror: replay the carried broadcast residual,
                 # then carry what this round's compression drops.
@@ -787,8 +880,20 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             if fl.downlink_error_feedback:
                 new_dl = pvec - recon
             if fl.downlink_delta:
-                recon = state.prev_broadcast + recon
-                new_bcast = recon
+                # publish version v = head_ver + 1 into the ring and
+                # advance the chain head (recon is this version's delta
+                # reconstruction D_v); every selected client pulls the
+                # new head (delta-decoded or resynced), so its
+                # last-pulled version moves to v.
+                new_bcast = transport_mod.downlink.advance_broadcast(
+                    state.bcast, recon)
+                recon = new_bcast.head
+                v = new_bcast.head_ver
+                if fl.telemetry:
+                    down_split = _down_byte_split(
+                        fl, pvec.shape[0], state.bcast.ver[sel_idx], v)
+                new_bcast = new_bcast._replace(
+                    ver=new_bcast.ver.at[sel_idx].set(v))
             params = punravel(recon)
 
         deltas, losses = jax.vmap(
@@ -955,10 +1060,11 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
             "expected_contribution": weighting.expected_contribution(w, jnp.cos(theta)),
         }
         if fl.telemetry:
-            metrics.update(_telemetry_metrics(fl, params, sel_idx, w))
+            metrics.update(_telemetry_metrics(fl, params, sel_idx, w,
+                                              down_split=down_split))
         return state._replace(
             params=new_params, angle=new_state, prev_delta=g_avg,
-            ef=new_ef, dl_ef=new_dl, prev_broadcast=new_bcast,
+            ef=new_ef, dl_ef=new_dl, bcast=new_bcast,
             round=state.round + 1,
         ), metrics
 
@@ -1020,11 +1126,11 @@ def _make_buffered_round(loss_fn, fl: FLConfig, delta_constraint,
                 "fl.downlink_error_feedback=True: state.dl_ef is missing "
                 "— build the state with fl.init_round_state (or "
                 "transport.downlink.init_downlink_error_feedback)")
-        if fl.downlink_delta and state.prev_broadcast is None:
+        if fl.downlink_delta and state.bcast is None:
             raise ValueError(
-                "fl.downlink_delta=True: state.prev_broadcast is missing "
-                "— build the state with fl.init_round_state (or "
-                "transport.downlink.init_prev_broadcast)")
+                "fl.downlink_delta=True: state.bcast is missing — build "
+                "the state with fl.init_round_state (or "
+                "transport.downlink.init_broadcast_state)")
         params, angle_state = state.params, state.angle
         ef_state, dl_state = state.ef, state.dl_ef
         lr = _lr_at(fl, state.round)
@@ -1051,13 +1157,19 @@ def _make_buffered_round(loss_fn, fl: FLConfig, delta_constraint,
 
         # ---- server -> client downlink (identical to the sync round:
         # candidates pull the CURRENT broadcast every tick, so the
-        # downlink EF / prev-broadcast bookkeeping advances per tick) ----
+        # downlink EF / broadcast-chain bookkeeping advances per tick;
+        # the per-client version rows move only for ADMITTED candidates,
+        # below, once the admission mask is known — admission is when a
+        # pull actually happens in the simulation, which is what fixes a
+        # buffered client's decode base at admission time) ----
         params_srv = params
-        new_dl, new_bcast = dl_state, state.prev_broadcast
+        new_dl, new_bcast = dl_state, state.bcast
+        bcast_v, n_ravel = None, 0
         if fl.downlink != "f32":
             pvec, punravel = treemath.tree_ravel(params)
+            n_ravel = pvec.shape[0]
             if fl.downlink_delta:
-                pvec = pvec - state.prev_broadcast
+                pvec = pvec - state.bcast.head
             if fl.downlink_error_feedback:
                 pvec = pvec + dl_state
             qd = transport_mod.downlink.compress(pvec, fl.downlink)
@@ -1065,8 +1177,10 @@ def _make_buffered_round(loss_fn, fl: FLConfig, delta_constraint,
             if fl.downlink_error_feedback:
                 new_dl = pvec - recon
             if fl.downlink_delta:
-                recon = state.prev_broadcast + recon
-                new_bcast = recon
+                new_bcast = transport_mod.downlink.advance_broadcast(
+                    state.bcast, recon)
+                recon = new_bcast.head
+                bcast_v = new_bcast.head_ver
             params = punravel(recon)
 
         # ---- candidate local updates (all K slots compute; admission
@@ -1084,6 +1198,20 @@ def _make_buffered_round(loss_fn, fl: FLConfig, delta_constraint,
         # never waits on a timeout).
         busy = buffer_mod.population_busy(state.buf, fl.num_clients)
         admit = state.buf.free & ~busy[sel_idx] & ~drop
+
+        # admitted candidates actually pulled this tick's broadcast:
+        # their decode base — and so their last-pulled version — is
+        # fixed at admission time; busy/dropped candidates never pulled
+        # and are neither version-advanced nor charged downlink bytes.
+        down_split = None
+        if fl.downlink_delta:
+            if fl.telemetry:
+                down_split = _down_byte_split(
+                    fl, n_ravel, state.bcast.ver[sel_idx], bcast_v,
+                    pulled=admit)
+            new_bcast = new_bcast._replace(
+                ver=new_bcast.ver.at[sel_idx].set(
+                    jnp.where(admit, bcast_v, new_bcast.ver[sel_idx])))
 
         # ---- client uplink: compress to the wire, buffer the f32
         # reconstruction (the tree engine never reads the wire, and rows
@@ -1216,14 +1344,15 @@ def _make_buffered_round(loss_fn, fl: FLConfig, delta_constraint,
             # computed over them), not this tick's candidates; ages and
             # the landed mask are per-row, occupancy counts live slots.
             metrics.update(_telemetry_metrics(fl, params, buf.slot, w,
-                                              occupied=~buf.free))
+                                              occupied=~buf.free,
+                                              down_split=down_split))
             metrics["tel/ages"] = buf.age
             metrics["tel/landed"] = landed
             metrics["tel/occupancy"] = jnp.sum((~buf.free)
                                                .astype(jnp.int32))
         return state._replace(
             params=new_params, angle=new_angle, prev_delta=new_prev,
-            ef=new_ef, dl_ef=new_dl, prev_broadcast=new_bcast,
+            ef=new_ef, dl_ef=new_dl, bcast=new_bcast,
             buf=final_buf, rng=new_rng, round=state.round + 1,
         ), metrics
 

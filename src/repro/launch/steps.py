@@ -192,7 +192,7 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: shapes_mod.InputShape,
     rep = lambda t: sharding.replicated(mesh, t)
     state_shard = fl_mod.RoundState(
         params=p_shard, angle=rep(state_sds.angle), prev_delta=prev_shard,
-        ef=None, dl_ef=None, prev_broadcast=None,
+        ef=None, dl_ef=None, bcast=None,
         rng=rep(state_sds.rng), round=rep(state_sds.round))
     in_shard = (state_shard, b_shard, rep(args[2]), rep(args[3]))
     out_sds = jax.eval_shape(round_fn, *args)

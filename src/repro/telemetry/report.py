@@ -18,10 +18,24 @@ from repro.telemetry.sinks import load_events  # noqa: F401  (re-export)
 
 
 def _percentile(sorted_vals, q: float) -> float:
+    """Linear-interpolation percentile (numpy's default method).
+
+    The previous `round()` on the fractional rank used banker's
+    rounding, so half-valued ranks picked the lower sample for even
+    positions and the upper for odd ones — p50 of [1, 2, 3, 4] came out
+    2, not 2.5. Interpolating between the bracketing samples makes the
+    estimate continuous in q and order-consistent across span lists.
+    """
     if not sorted_vals:
         return math.nan
-    i = min(len(sorted_vals) - 1, max(0, round(q * (len(sorted_vals) - 1))))
-    return sorted_vals[i]
+    pos = q * (len(sorted_vals) - 1)
+    pos = min(len(sorted_vals) - 1, max(0.0, pos))
+    lo = math.floor(pos)
+    hi = math.ceil(pos)
+    if lo == hi:
+        return sorted_vals[lo]
+    frac = pos - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
 
 
 def rounds_to_target(events: list, target: float) -> Optional[int]:

@@ -54,6 +54,7 @@ OPTIONAL_FIELDS = {
     "manifest": ("git_commit", "device_kind", "config", "config_hash",
                  "argv", "extra"),
     "round": ("accuracy", "weight_entropy", "bytes_up", "bytes_down",
+              "bytes_down_delta", "bytes_down_full",
               "flushed", "buffer_landed", "occupancy", "staleness"),
     "node": ("age", "landed"),
     "span": ("round", "t0"),

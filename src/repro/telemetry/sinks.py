@@ -167,11 +167,13 @@ _ROUND_SCALARS = (
     ("loss", "loss"), ("lr", "lr"), ("divergence", "divergence"),
     ("tel/weight_entropy", "weight_entropy"),
     ("tel/bytes_up", "bytes_up"), ("tel/bytes_down", "bytes_down"),
+    ("tel/bytes_down_delta", "bytes_down_delta"),
+    ("tel/bytes_down_full", "bytes_down_full"),
     ("flushed", "flushed"), ("buffer_landed", "buffer_landed"),
     ("tel/occupancy", "occupancy"), ("staleness", "staleness"),
 )
 _INT_FIELDS = {"flushed", "buffer_landed", "occupancy", "bytes_up",
-               "bytes_down"}
+               "bytes_down", "bytes_down_delta", "bytes_down_full"}
 
 
 def emit_round_block(sink: TelemetrySink, metrics: dict, start_round: int,

@@ -12,9 +12,14 @@ single HBM pass over ~4x (int8) / ~8x (int4) fewer bytes.
 Downlink — `downlink.compress` applies the same formats to the (N,)
 global model the server broadcasts back (f32 / bf16 / int8), with
 optional server-side error feedback; `downlink.delta_compress` ships
-the quantized model DIFF against the previous round's reconstruction
-instead (`FLConfig(downlink_delta=True)`, carried in
-`fl.RoundState.prev_broadcast`); `round_bytes` reports both directions.
+the quantized model DIFF against the broadcast chain head instead
+(`FLConfig(downlink_delta=True)`). Per-client delta state — the head,
+an R-deep ring of delta reconstructions, and each client's last-pulled
+version — is a `downlink.BroadcastState` carried in
+`fl.RoundState.bcast`, so partially-participating clients decode
+against the base they actually hold (or take a full-model resync when
+more than R versions behind); `round_bytes` reports both directions,
+including the delta/full downlink split.
 
 Contract (ROADMAP): transport="f32" is the reference wire format and
 downlink="f32" the reference broadcast; the tree engine never reads

@@ -25,20 +25,57 @@ over time even though each individual broadcast is lossy.
 Delta encoding (`FLConfig(downlink_delta=True)`): instead of compressing
 the full model every round, `delta_compress` quantizes the DIFF between
 the current params and the previous round's reconstructed broadcast
-(`RoundState.prev_broadcast`, zeros at init so round 0 ships the full
-model). The server and every client advance the same reconstruction
-prev + dequantize(q), so the stream never drifts; because per-round
+(zeros at init so round 0 ships the full model). The server canonical
+chain B_v = B_{v-1} + dequantize(q_v) never drifts; because per-round
 model diffs are orders of magnitude smaller than the params, the int8
 scales track them far more tightly than a full-model broadcast at the
 same byte cost.
+
+Per-client state (`BroadcastState`, carried in `fl.RoundState.bcast`):
+under partial participation (clients_per_round < num_clients) or
+buffered admission, a client does NOT receive every broadcast — its
+decode base is the reconstruction of the LAST version it pulled, not
+B_{v-1}. The server therefore keeps:
+
+* ``ring``  — (R, N) f32, the delta reconstructions D_j = dequantize(q_j)
+  of the last R broadcast versions (slot j holds version v, v % R == j).
+* ``head``  — (N,) f32, the current chain reconstruction B_v (what this
+  round's pullers train from; plays the old shared prev-broadcast's role
+  in the compression math, which is what keeps the full-participation
+  path bit-identical).
+* ``head_ver`` — () i32, the version of ``head`` (-1 before any
+  broadcast).
+* ``ver``   — (num_clients,) i32, the last version each client pulled;
+  `NEVER_PULLED` (-1) marks clients that must receive a full model.
+
+A client at version w pulling version v replays the ring's deltas
+D_{w+1}..D_v onto its held base in version order — f32 additions in the
+SAME association order as the server chain, so the decode is bitwise
+B_v (`client_decode` is the reference client-side decoder, pinned by
+tests/test_downlink_state.py). A client more than R versions behind (or
+one that never pulled) cannot replay and receives a full quantized model
+instead — catch-up resync (`resync_mask`). The resync payload costs one
+full-model unit of `wire_bytes(1, n, downlink)` on the wire; the
+simulation hands the resynced client the exact head reconstruction (a
+deliberate idealization: re-quantizing the full model would fork that
+client's params from the shared broadcast and break the vmapped round's
+one-reconstruction contract — the BYTES are accounted, the quantization
+noise of the rare resync path is not modeled).
 """
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.transport import quantize as quantize_mod
 from repro.transport.quantize import DOWNLINKS, dequantize, quantize
+
+# `BroadcastState.ver` sentinel: this client never pulled a broadcast
+# (fresh init, or a client added by an elastic-K restore) — it cannot
+# delta-decode anything and must receive a full model.
+NEVER_PULLED = -1
 
 
 def compress(vec: jax.Array, downlink: str) -> quantize_mod.QuantizedDelta:
@@ -88,8 +125,96 @@ def delta_roundtrip(vec: jax.Array, prev: jax.Array,
     return delta_decompress(delta_compress(vec, prev, downlink), prev)
 
 
-def init_prev_broadcast(n: int) -> jax.Array:
-    """(N,) f32 previous-broadcast carry for delta encoding. Zeros: the
-    first delta-encoded broadcast is the diff against nothing, i.e. the
-    full model."""
-    return jnp.zeros((n,), jnp.float32)
+class BroadcastState(NamedTuple):
+    """Per-client downlink-delta bookkeeping (see module docstring).
+
+    Carried in `fl.RoundState.bcast` when `FLConfig(downlink_delta=True)`;
+    `fl.state_to_tree` round-trips it through the checkpoint codec, with
+    `ver` resized (fill = `NEVER_PULLED`) on elastic-K restore.
+    """
+
+    ring: jax.Array  # (R, N) f32 — delta recon D_j of the last R versions
+    head: jax.Array  # (N,) f32 — current chain reconstruction B_{head_ver}
+    head_ver: jax.Array  # () i32 — version of head; -1 before any broadcast
+    ver: jax.Array  # (num_clients,) i32 — last version each client pulled
+
+
+def init_broadcast_state(n: int, num_clients: int,
+                         ring: int) -> BroadcastState:
+    """Fresh BroadcastState: empty R-deep ring, zero head (the first
+    delta-encoded broadcast diffs against nothing, i.e. ships the full
+    model), and every client marked `NEVER_PULLED`."""
+    if ring < 1:
+        raise ValueError(f"downlink ring depth must be >= 1, got {ring}")
+    return BroadcastState(
+        ring=jnp.zeros((ring, n), jnp.float32),
+        head=jnp.zeros((n,), jnp.float32),
+        head_ver=jnp.int32(NEVER_PULLED),
+        ver=jnp.full((num_clients,), NEVER_PULLED, jnp.int32),
+    )
+
+
+def resync_mask(ver_rows: jax.Array, v, ring: int) -> jax.Array:
+    """True where a client at last-pulled version `ver_rows` cannot
+    delta-decode broadcast version `v` and needs a full-model resync:
+    it never pulled, or it is more than `ring` versions behind (the
+    deltas it would replay have been overwritten)."""
+    return (ver_rows == NEVER_PULLED) | (v - ver_rows > ring)
+
+
+def advance_broadcast(bstate: BroadcastState,
+                      d_recon: jax.Array) -> BroadcastState:
+    """Publish broadcast version v = head_ver + 1: write its delta
+    reconstruction `d_recon` into ring slot v % R and advance the chain
+    head to B_v = B_{v-1} + D_v. Per-client `ver` rows are updated
+    separately by the round function (`ver.at[...].set(v)` for the
+    clients that actually pulled / were admitted this round).
+
+    The head add deliberately consumes the row READ BACK from the
+    just-updated ring, not `d_recon` itself: the dequantize that
+    produces `d_recon` is cheap elementwise work that XLA duplicates
+    into every consumer fusion, and inside the head-add fusion LLVM
+    contracts the dequantize multiply + add into an FMA (one rounding
+    instead of two) — drifting head 1 ulp from what a client replaying
+    the STORED ring rows computes. Reading the materialized row forces
+    the add to use the exact stored bytes; the read index is spelled
+    rem(v + R, R) (== v % R) so the algebraic simplifier cannot
+    collapse dynamic-slice(dynamic-update-slice) back to the un-stored
+    value. The replay bit-exactness pin in tests/test_downlink_state.py
+    guards this against compiler drift."""
+    v = bstate.head_ver + 1
+    r = jnp.int32(bstate.ring.shape[0])
+    ring = jax.lax.dynamic_update_index_in_dim(
+        bstate.ring, d_recon, jax.lax.rem(v, r), axis=0)
+    d_stored = jax.lax.dynamic_index_in_dim(
+        ring, jax.lax.rem(v + r, r), 0, keepdims=False)
+    return bstate._replace(
+        ring=ring,
+        head=bstate.head + d_stored,
+        head_ver=v,
+    )
+
+
+def client_decode(bstate: BroadcastState, base: jax.Array,
+                  base_ver: int) -> jax.Array:
+    """The reference CLIENT-side decoder: replay the ring's delta
+    reconstructions base_ver+1 .. head_ver onto the base the client
+    actually holds, in version order.
+
+    Because the additions run in the same f32 association order as the
+    server chain B_v = B_{v-1} + D_v, the result is bitwise equal to
+    `bstate.head` — the regression pin of tests/test_downlink_state.py.
+    Host/test helper (python loop over at most R rows); raises if the
+    client is outside the ring's reach and needs a full resync.
+    """
+    v = int(bstate.head_ver)
+    w = int(base_ver)
+    r = bstate.ring.shape[0]
+    if w == NEVER_PULLED or v - w > r:
+        raise ValueError(
+            f"client at version {w} cannot delta-decode version {v} with "
+            f"a {r}-deep ring — it needs a full-model resync")
+    out = base
+    for j in range(w + 1, v + 1):
+        out = out + bstate.ring[j % r]
+    return out

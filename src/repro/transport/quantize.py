@@ -246,20 +246,50 @@ def wire_bytes(k: int, n: int, transport: str, *,
 
 
 def round_bytes(k: int, n: int, transport: str, downlink: str = "f32", *,
-                group_size: int = GROUP_SIZE) -> dict:
+                group_size: int = GROUP_SIZE,
+                delta_payloads: int | None = None,
+                full_clients: int | None = None) -> dict:
     """Both directions of one round's wire traffic, in bytes.
 
     up:    K client uplinks of the delta buffer in `transport`.
-    down:  K server->client broadcasts of the N-param global model in
-           `downlink` (unicast accounting — multicast fabrics pay less).
+    down:  unicast accounting (multicast fabrics pay less) of the
+           server->client broadcasts in `downlink`. Default: K clients
+           each receiving one N-param payload — which is exact for a
+           full broadcast, and the degenerate case of the delta-encoded
+           downlink under full participation (every client is exactly
+           one version behind, so each pulls one delta payload).
     total: up + down.
+
+    Under `downlink_delta` with partial participation the per-client
+    payload counts vary by staleness: pass `delta_payloads` (the summed
+    number of single-version delta payloads served this round — a
+    client b versions behind replays b of them) and `full_clients` (the
+    number of clients resynced with a full model) to get the actual
+    split; the dict then also carries "down_delta" and "down_full"
+    (down == down_delta + down_full), matching the round's
+    `tel/bytes_down_delta` / `tel/bytes_down_full` metrics. Both
+    directions price one payload at `wire_bytes(1, n, downlink)` — a
+    delta payload ships the same quantized (N,) buffer as a full one;
+    the saving is needing ONE per missed version instead of K full
+    models every round.
     """
     if downlink not in DOWNLINKS:
         raise ValueError(f"unknown downlink {downlink!r} "
                          f"(expected one of {DOWNLINKS})")
+    if (delta_payloads is None) != (full_clients is None):
+        raise ValueError("delta_payloads and full_clients must be "
+                         "passed together (the delta/full split of one "
+                         "round's downlink)")
     up = wire_bytes(k, n, transport, group_size=group_size)
-    down = k * wire_bytes(1, n, downlink)
-    return {"up": up, "down": down, "total": up + down}
+    unit = wire_bytes(1, n, downlink)
+    if delta_payloads is None:
+        down = k * unit
+        return {"up": up, "down": down, "total": up + down}
+    down_delta = delta_payloads * unit
+    down_full = full_clients * unit
+    down = down_delta + down_full
+    return {"up": up, "down": down, "down_delta": down_delta,
+            "down_full": down_full, "total": up + down}
 
 
 def init_error_feedback(num_clients: int, n: int) -> jax.Array:

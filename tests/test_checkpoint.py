@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import transport
 from repro.checkpoint import io as ckpt_io
 from repro.core import fl
 from repro.core.server import FedServer
@@ -219,6 +220,19 @@ def test_state_from_tree_validates_shape_and_dtype():
                                  if k != "rng"})
 
 
+def test_state_from_tree_rejects_legacy_prev_broadcast():
+    """A checkpoint written by the shared-vector revision carries
+    'prev_broadcast' instead of 'bcast' — its per-client decode bases
+    are unrecoverable, so the codec refuses with a pointed error rather
+    than silently resyncing every client."""
+    cfg = _combo_cfg(False, False, True)
+    tree = fl.state_to_tree(fl.init_round_state(cfg, _PARAMS))
+    bcast = tree.pop("bcast")
+    tree["prev_broadcast"] = bcast["head"]
+    with pytest.raises(ValueError, match="prev_broadcast"):
+        fl.state_from_tree(cfg, tree)
+
+
 def test_state_from_tree_wraps_old_style_raw_key():
     cfg = _combo_cfg(False, False, False)
     tree = fl.state_to_tree(fl.init_round_state(cfg, _PARAMS))
@@ -264,6 +278,40 @@ def test_elastic_k_repad_semantics():
     _assert_bitexact(b7.params, st.params)
     np.testing.assert_array_equal(jax.random.key_data(b7.rng),
                                   jax.random.key_data(st.rng))
+
+
+def test_elastic_k_bcast_repad_semantics():
+    """The broadcast-delta state is part K-dependent (ver) and part
+    model-dependent (ring/head/head_ver). K=10 -> 13: surviving clients
+    keep their last-pulled version bit-exactly, new clients start
+    NEVER_PULLED (they must take a full resync). K=10 -> 7: departed
+    clients' version rows are dropped. The ring, head, and head_ver are
+    K-independent and restore bit-exactly in both directions."""
+    cfg10 = _combo_cfg(False, False, True, num_clients=10)
+    st = fl.init_round_state(cfg10, _PARAMS, seed=1)
+    n = fl.param_count(_PARAMS)
+    st = st._replace(bcast=st.bcast._replace(
+        ring=st.bcast.ring.at[0].set(0.125),
+        head=jnp.full((n,), 0.5, jnp.float32),
+        head_ver=jnp.int32(4),
+        ver=jnp.arange(10, dtype=jnp.int32) - 1))  # client 0 never pulled
+    tree = fl.state_to_tree(st)
+
+    b13 = fl.state_from_tree(_combo_cfg(False, False, True, 13), tree)
+    assert b13.bcast.ver.shape == (13,)
+    np.testing.assert_array_equal(np.asarray(b13.bcast.ver)[:10],
+                                  np.asarray(st.bcast.ver))
+    assert np.all(np.asarray(b13.bcast.ver)[10:]
+                  == transport.downlink.NEVER_PULLED)
+    _assert_bitexact((b13.bcast.ring, b13.bcast.head, b13.bcast.head_ver),
+                     (st.bcast.ring, st.bcast.head, st.bcast.head_ver))
+
+    b7 = fl.state_from_tree(_combo_cfg(False, False, True, 7), tree)
+    assert b7.bcast.ver.shape == (7,)
+    np.testing.assert_array_equal(np.asarray(b7.bcast.ver),
+                                  np.asarray(st.bcast.ver)[:7])
+    _assert_bitexact((b7.bcast.ring, b7.bcast.head, b7.bcast.head_ver),
+                     (st.bcast.ring, st.bcast.head, st.bcast.head_ver))
 
 
 # --------------------------------------- kill/resume golden invariance
@@ -348,6 +396,38 @@ def test_kill_resume_stepwise_invariance(tmp_path, golden_task):
         res.step()
     assert res.round == 6
     _assert_bitexact(res.state, ref.state)
+
+
+def test_kill_resume_subset_selection_downlink_delta(tmp_path,
+                                                     golden_task):
+    """Kill/resume with the per-client broadcast state in play: 5-of-10
+    subset selection + delta-encoded downlink, so the checkpoint carries
+    a mid-flight ring, chain head, and staggered per-client versions.
+    The resumed run must reproduce the uninterrupted one bit-exactly —
+    state AND accuracy trace (the 85%-target assertion is owned by the
+    full-participation legs; subset selection converges slower)."""
+    rounds, block = 6, 2
+    cfg = fl.FLConfig(num_clients=10, clients_per_round=5, local_steps=12,
+                      method="fedadp", engine="flat", downlink="int8",
+                      downlink_delta=True, base_lr=0.05)
+    d = str(tmp_path / "ckpts")
+    ref = _golden_server(golden_task, cfg)
+    h_ref = ref.run_scanned(rounds, eval_every=1, block=block,
+                            ckpt_dir=d, ckpt_keep=0)
+    # the checkpointed state really is mid-stream per-client state:
+    # chain advanced every round, versions staggered by selection
+    assert int(ref.state.bcast.head_ver) == rounds - 1
+    ver = np.asarray(ref.state.bcast.ver)
+    assert len(set(ver.tolist())) > 1, f"degenerate schedule: {ver}"
+
+    edges = dict(ckpt_io.list_checkpoints(d))
+    for edge in (2, 4):
+        res = _golden_server(golden_task, cfg)
+        assert res.restore(edges[edge]) == edge
+        h_res = res.run_scanned(rounds - edge, eval_every=1, block=block)
+        np.testing.assert_array_equal(np.asarray(h_res.accuracy),
+                                      np.asarray(h_ref.accuracy)[edge:])
+        _assert_bitexact(res.state, ref.state, what=f"edge {edge}: ")
 
 
 def test_elastic_k_restore_converges(tmp_path, golden_task):

@@ -1,0 +1,306 @@
+"""Per-client downlink-delta state: the shared-broadcast regression pins.
+
+The pre-ring repo carried ONE shared (N,) previous-broadcast vector, which
+silently assumed every client receives every broadcast. Under subset
+selection (clients_per_round < num_clients) — and under buffered
+admission, where a client's base is fixed at admission time — a client
+that sat out rounds would have decoded the next delta against a base it
+never held. These tests pin the fixed contract:
+
+* a re-selected client replaying the ring's delta reconstructions from
+  the base it ACTUALLY holds lands bitwise on the server's broadcast
+  head (the failing regression of the shared-vector design);
+* a client more than `downlink_ring` versions behind cannot replay and
+  is resynced with a full model (`resync_mask`, `client_decode` raises);
+* per-client down-bytes (delta payloads vs full resyncs) surface through
+  the tel/* keys and degenerate to the static K-unicast accounting under
+  full participation;
+* the buffered twin fixes the decode base at ADMISSION time: a client
+  whose report is in flight keeps its pull version until re-admitted.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import transport
+from repro.core import fl
+from repro.transport import downlink
+
+C, K, TAU, B, D = 6, 2, 2, 4, 8
+
+
+def _problem(seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.zeros((D, 1), jnp.float32),
+              "b": jnp.zeros((1,), jnp.float32)}
+    X = rng.normal(size=(C, TAU, B, D)).astype(np.float32)
+    w_true = rng.normal(size=(C, D, 1)).astype(np.float32)
+    Y = np.einsum("ctbd,cde->ctbe", X, w_true)
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    return params, loss_fn, np.asarray(X), np.asarray(Y)
+
+
+def _cfg(**kw):
+    base = dict(num_clients=C, clients_per_round=K, local_steps=TAU,
+                method="fedadp", base_lr=0.1, downlink="int8",
+                downlink_delta=True)
+    base.update(kw)
+    return fl.FLConfig(**base)
+
+
+def _run(cfg, schedule, loss_fn, params, X, Y):
+    """Drive round_fn through an explicit per-round selection schedule,
+    yielding (round, sel, state, metrics) after each round."""
+    rf = jax.jit(fl.make_round_fn(loss_fn, cfg))
+    st = fl.init_round_state(cfg, params)
+    sizes = jnp.full((cfg.clients_per_round,), 10.0, jnp.float32)
+    for r, sel in enumerate(schedule):
+        batches = (jnp.asarray(X[sel]), jnp.asarray(Y[sel]))
+        st, m = rf(st, batches, jnp.asarray(sel, jnp.int32), sizes)
+        yield r, sel, st, m
+
+
+# --------------------------------------------- the failing regression
+
+
+def test_reselected_client_decodes_servers_broadcast():
+    """THE regression: client 0 pulls at round 0, sits out rounds 1-3
+    while the broadcast chain advances, and is re-selected at round 4.
+    Decoding from the base it actually holds (replaying the ring's
+    deltas in version order) must equal the server's head BITWISE.
+
+    The pre-fix shared prev-broadcast design would have had the client
+    apply only the LAST delta to its stale base — asserted below to
+    differ, so this test discriminates the bug, not just the happy path.
+    """
+    params, loss_fn, X, Y = _problem()
+    schedule = [[0, 1], [2, 3], [4, 5], [1, 2], [0, 3]]
+    base, base_ver = None, downlink.NEVER_PULLED
+    for r, sel, st, _ in _run(_cfg(), schedule, loss_fn, params, X, Y):
+        assert int(st.bcast.head_ver) == r
+        if 0 not in sel:
+            continue
+        if base_ver == downlink.NEVER_PULLED:
+            # first pull: full-model resync (the sim hands the head)
+            assert bool(downlink.resync_mask(
+                jnp.int32(base_ver), int(st.bcast.head_ver),
+                _cfg().downlink_ring))
+        else:
+            decoded = downlink.client_decode(
+                st.bcast, jnp.asarray(base), base_ver)
+            head = np.asarray(st.bcast.head)
+            assert np.asarray(decoded).tobytes() == head.tobytes()
+            # the shared-vector decode (stale base + last delta only)
+            # would NOT have reconstructed the broadcast:
+            last = np.asarray(st.bcast.ring)[r % _cfg().downlink_ring]
+            assert (base + last).tobytes() != head.tobytes()
+        base, base_ver = np.asarray(st.bcast.head), int(st.bcast.head_ver)
+    assert base_ver == 4  # client 0 re-pulled at the last round
+    # ver tracks the last pull of every client per the schedule
+    assert st.bcast.ver.tolist() == [4, 3, 3, 4, 2, 2]
+
+
+def test_client_behind_the_ring_needs_full_resync():
+    """With a 2-deep ring, a client 3+ versions behind cannot replay the
+    overwritten deltas: resync_mask flags it, client_decode refuses, and
+    after re-selection its version is current again."""
+    params, loss_fn, X, Y = _problem()
+    cfg = _cfg(downlink_ring=2)
+    schedule = [[0, 1], [2, 3], [4, 5], [1, 2], [0, 3]]
+    states = [st for _, _, st, _ in _run(cfg, schedule, loss_fn, params,
+                                         X, Y)]
+    st3, st4 = states[3], states[4]
+    # before round 4, client 0 last pulled version 0; version 4 is 4
+    # behind — outside the 2-deep ring
+    assert int(st3.bcast.ver[0]) == 0
+    assert bool(downlink.resync_mask(st3.bcast.ver[0], 4,
+                                     cfg.downlink_ring))
+    with pytest.raises(ValueError, match="resync"):
+        downlink.client_decode(st4.bcast, st4.bcast.ring[0], 0)
+    # a 1-behind client still delta-decodes under the same ring
+    assert not bool(downlink.resync_mask(jnp.int32(3), 4,
+                                         cfg.downlink_ring))
+    assert st4.bcast.ver.tolist() == [4, 3, 3, 4, 2, 2]
+
+
+def test_full_participation_every_round_is_one_delta():
+    """clients_per_round == num_clients: after the round-0 resync, every
+    client is exactly one version behind every round — the ring design
+    degenerates to the shared-vector accounting (K delta payloads)."""
+    params, loss_fn, X, Y = _problem()
+    cfg = _cfg(clients_per_round=C, telemetry="node")
+    n = fl.param_count(params)
+    unit = transport.wire_bytes(1, n, cfg.downlink)
+    schedule = [list(range(C))] * 3
+    for r, _, st, m in _run(cfg, schedule, loss_fn, params, X, Y):
+        assert st.bcast.ver.tolist() == [r] * C
+        assert float(m["tel/bytes_down"]) == C * unit
+        if r == 0:  # everyone resyncs on the first broadcast
+            assert float(m["tel/bytes_down_full"]) == C * unit
+            assert float(m["tel/bytes_down_delta"]) == 0.0
+        else:  # everyone replays exactly one delta
+            assert float(m["tel/bytes_down_delta"]) == C * unit
+            assert float(m["tel/bytes_down_full"]) == 0.0
+        # the static accounting is the degenerate case
+        rb = transport.round_bytes(C, n, cfg.transport, cfg.downlink)
+        assert float(m["tel/bytes_down"]) == rb["down"]
+
+
+def test_per_client_down_bytes_follow_staleness():
+    """Subset selection: a delta-served client pays one payload per
+    missed version (behind x unit); a resync pays one full unit."""
+    params, loss_fn, X, Y = _problem()
+    cfg = _cfg(telemetry="node")
+    n = fl.param_count(params)
+    unit = transport.wire_bytes(1, n, cfg.downlink)
+    schedule = [[0, 1], [2, 3], [0, 4]]
+    seen = []
+    for r, _, st, m in _run(cfg, schedule, loss_fn, params, X, Y):
+        seen.append((float(m["tel/bytes_down_delta"]),
+                     float(m["tel/bytes_down_full"]),
+                     float(m["tel/bytes_down"])))
+    # round 0: both fresh -> 2 full; round 1: both fresh -> 2 full;
+    # round 2: client 0 is 2 versions behind (2 delta payloads),
+    # client 4 fresh (1 full)
+    assert seen[0] == (0.0, 2 * unit, 2 * unit)
+    assert seen[1] == (0.0, 2 * unit, 2 * unit)
+    assert seen[2] == (2 * unit, 1 * unit, 3 * unit)
+
+
+def test_off_path_carries_no_byte_metrics():
+    """telemetry=None: the dynamic byte accounting must stay out of the
+    metrics dict (the standing zero-overhead off-path contract)."""
+    params, loss_fn, X, Y = _problem()
+    for _, _, _, m in _run(_cfg(), [[0, 1]], loss_fn, params, X, Y):
+        assert not [k for k in m if k.startswith("tel/")]
+
+
+# ------------------------------------------------------- buffered twin
+
+
+def test_buffered_base_is_fixed_at_admission_time():
+    """Buffered admission: a client's decode base is the broadcast it
+    pulled when ADMITTED; while its report is in flight its version must
+    not advance, and on re-admission it replays every delta since its
+    admission-time pull — bitwise onto the server head."""
+    TK = 3  # buffered concurrency slots
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.zeros((D, 1), jnp.float32),
+              "b": jnp.zeros((1,), jnp.float32)}
+    X = rng.normal(size=(C, TAU, B, D)).astype(np.float32)
+    Y = np.einsum("ctbd,cde->ctbe", X,
+                  rng.normal(size=(C, D, 1)).astype(np.float32))
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    # client 0's tick-0 report straggles 2 ticks; buffer_m=2 keeps
+    # flushing without it. Client 5 is never offered: stays NEVER_PULLED.
+    # (arrival arrays are (T, K): per CANDIDATE slot, not per client.)
+    delays = np.zeros((5, TK), np.int32)
+    delays[0, 0] = 2
+    drops = np.zeros((5, TK), bool)
+    cfg = fl.FLConfig(num_clients=C, clients_per_round=TK, local_steps=TAU,
+                      method="fedadp", base_lr=0.1, downlink="int8",
+                      downlink_delta=True, aggregation="buffered",
+                      buffer_m=2)
+    rf = jax.jit(fl.make_round_fn(
+        loss_fn, cfg,
+        arrival_fn=repro.fixed_arrival_schedule(delays, drops)))
+    st = fl.init_round_state(cfg, params)
+    sizes = jnp.full((TK,), 10.0, jnp.float32)
+    schedule = [[0, 1, 2], [0, 3, 4], [0, 1, 2], [0, 3, 4]]
+    states = []
+    for sel in schedule:
+        batches = (jnp.asarray(X[sel]), jnp.asarray(Y[sel]))
+        st, m = rf(st, batches, jnp.asarray(sel, jnp.int32), sizes)
+        states.append(st)
+
+    # tick 0 admitted client 0 at version 0; ticks 1-2 re-offer it but
+    # its report is in flight (busy) -> NOT re-admitted, version frozen
+    assert int(states[0].bcast.ver[0]) == 0
+    assert int(states[1].bcast.ver[0]) == 0
+    assert int(states[2].bcast.ver[0]) == 0
+    # its report landed and flushed by tick 2 -> tick 3 re-admits it: it
+    # replays deltas 1..3 onto its ADMISSION-TIME base (version 0)
+    assert int(states[3].bcast.ver[0]) == 3
+    base = states[0].bcast.head  # what client 0 pulled at admission
+    decoded = downlink.client_decode(states[3].bcast, base, 0)
+    assert (np.asarray(decoded).tobytes()
+            == np.asarray(states[3].bcast.head).tobytes())
+    # the never-offered client still needs a full model
+    assert int(states[3].bcast.ver[5]) == downlink.NEVER_PULLED
+
+
+def test_buffered_bytes_count_admitted_pulls_only():
+    """Busy (in-flight) and dropped candidates never pulled this tick's
+    broadcast: the tel/* byte split charges admitted clients only."""
+    rng = np.random.default_rng(2)
+    params = {"w": jnp.zeros((D, 1), jnp.float32),
+              "b": jnp.zeros((1,), jnp.float32)}
+    X = rng.normal(size=(4, TAU, B, D)).astype(np.float32)
+    Y = np.einsum("ctbd,cde->ctbe", X,
+                  rng.normal(size=(4, D, 1)).astype(np.float32))
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    delays = np.zeros((3, 2), np.int32)
+    drops = np.zeros((3, 2), bool)
+    drops[0, 1] = True  # client 1's tick-0 report is lost in transit
+    cfg = fl.FLConfig(num_clients=4, clients_per_round=2, local_steps=TAU,
+                      method="fedadp", base_lr=0.1, downlink="int8",
+                      downlink_delta=True, aggregation="buffered",
+                      buffer_m=1, telemetry="node")
+    rf = jax.jit(fl.make_round_fn(
+        loss_fn, cfg,
+        arrival_fn=repro.fixed_arrival_schedule(delays, drops)))
+    st = fl.init_round_state(cfg, params)
+    n = fl.param_count(params)
+    unit = transport.wire_bytes(1, n, cfg.downlink)
+    sizes = jnp.full((2,), 10.0, jnp.float32)
+    sel = jnp.asarray([0, 1], jnp.int32)
+    batches = (jnp.asarray(X[:2]), jnp.asarray(Y[:2]))
+    # tick 0: client 0 admitted (full resync), client 1 dropped in
+    # transit — it never pulled, so only ONE full payload is charged
+    st, m = rf(st, batches, sel, sizes)
+    assert float(m["tel/bytes_down"]) == 1 * unit
+    assert float(m["tel/bytes_down_full"]) == 1 * unit
+    assert int(st.bcast.ver[1]) == downlink.NEVER_PULLED
+    # tick 1: client 0's report flushed at tick 0, so it re-admits at
+    # one version behind (1 delta payload); client 1 resyncs (1 full)
+    st, m = rf(st, batches, sel, sizes)
+    assert float(m["tel/bytes_down_delta"]) == 1 * unit
+    assert float(m["tel/bytes_down_full"]) == 1 * unit
+    assert st.bcast.ver.tolist()[:2] == [1, 1]
+
+
+# ----------------------------------------------------- unit-level pins
+
+
+def test_advance_broadcast_ring_slots_and_versions():
+    n = 5
+    bs = downlink.init_broadcast_state(n, num_clients=3, ring=2)
+    assert int(bs.head_ver) == downlink.NEVER_PULLED
+    assert bs.ver.tolist() == [downlink.NEVER_PULLED] * 3
+    for v in range(4):
+        d = jnp.full((n,), float(v + 1), jnp.float32)
+        bs = downlink.advance_broadcast(bs, d)
+        assert int(bs.head_ver) == v
+        assert float(bs.ring[v % 2][0]) == v + 1
+    # head is the running chain; ring holds the LAST TWO deltas only
+    assert float(bs.head[0]) == 1 + 2 + 3 + 4
+    assert [float(r[0]) for r in bs.ring] == [3.0, 4.0]
+
+
+def test_init_broadcast_state_rejects_bad_ring():
+    with pytest.raises(ValueError, match="ring"):
+        downlink.init_broadcast_state(4, num_clients=2, ring=0)

@@ -266,7 +266,8 @@ def test_downlink_delta_stream_never_drifts():
 
 def test_downlink_delta_engines_agree():
     """downlink_delta is applied upstream of the engine branch: tree ==
-    flat == flat_sharded to 1e-5, prev_broadcast advancing identically."""
+    flat == flat_sharded to 1e-5, the broadcast chain head advancing
+    identically."""
     rng = np.random.default_rng(0)
     K, tau, B, d = 4, 3, 8, 12
     params = {"w": jnp.full((d, 1), 0.05, jnp.float32),
@@ -294,16 +295,17 @@ def test_downlink_delta_engines_agree():
         for _ in range(3):
             st, _ = rf(st, (X, Y), sel, sizes)
         outs[engine] = st
-        assert st.prev_broadcast is not None
-        assert np.abs(np.asarray(st.prev_broadcast)).sum() > 0
+        assert st.bcast is not None
+        assert np.abs(np.asarray(st.bcast.head)).sum() > 0
+        assert int(st.bcast.head_ver) == 2  # three rounds: versions 0..2
     for engine in ("flat", "flat_sharded"):
         jax.tree.map(
             lambda a, b: np.testing.assert_allclose(
                 np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5),
             outs["tree"].params, outs[engine].params)
         np.testing.assert_allclose(
-            np.asarray(outs["tree"].prev_broadcast),
-            np.asarray(outs[engine].prev_broadcast), atol=1e-6)
+            np.asarray(outs["tree"].bcast.head),
+            np.asarray(outs[engine].bcast.head), atol=1e-6)
 
 
 def test_downlink_delta_requires_quantized_downlink():

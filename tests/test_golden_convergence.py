@@ -104,6 +104,58 @@ def test_golden_reproduces(method, uplink, downlink):
     assert _ratio_ok(got, golden) and _ratio_ok(golden, got), (got, golden)
 
 
+def test_golden_delta_section_complete_and_claims_hold():
+    """The subset-selection delta-downlink section: every delta wire pair
+    plus the per-method f32/f32 reference is present and reached the
+    target; fedadp <= fedavg per wire; every delta wire within 1.1x of
+    that method's plain-broadcast reference under the SAME 5-of-10
+    selection (delta encoding must not cost rounds)."""
+    d = _golden()["delta"]
+    wires = [tuple(w) for w in d["wires"]]
+    want = {f"{m}/{u}/{dn}"
+            for m in ("fedadp", "fedavg")
+            for u, dn in [("f32", "f32")] + wires}
+    assert set(d["entries"]) == want
+    assert all(isinstance(v, int) for v in d["entries"].values()), d["entries"]
+    assert d["task"]["clients_per_round"] < 10  # genuinely partial
+    for u, dn in wires:
+        assert d["entries"][f"fedadp/{u}/{dn}"] <= d["entries"][f"fedavg/{u}/{dn}"]
+    for method in ("fedadp", "fedavg"):
+        ref = d["entries"][f"{method}/f32/f32"]
+        for u, dn in wires:
+            rounds = d["entries"][f"{method}/{u}/{dn}"]
+            assert _ratio_ok(rounds, ref), (method, u, dn, rounds, ref)
+
+
+@pytest.mark.parametrize("method,uplink,downlink,delta", [
+    ("fedadp", "f32", "f32", False),   # the subset-selection reference
+    ("fedadp", "int4", "int8", True),  # fully-compressed delta wire
+    ("fedavg", "f32", "int8", True),   # slow-method delta wire
+])
+def test_golden_delta_reproduces(method, uplink, downlink, delta):
+    """Recomputed subset-selection rounds-to-target must match the delta
+    golden within the 10% band in both directions — this re-runs the
+    per-client broadcast-state path (ring + versions + byte split) end
+    to end on every CI leg."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.common import node_spec, run_fl
+
+    d = _golden()["delta"]
+    task = d["task"]
+    hist, _ = run_fl(
+        method, node_spec(5, 5, 1), rounds=task["max_rounds"],
+        target=task["target"], engine=task["engine"], transport=uplink,
+        downlink=downlink, downlink_delta=delta,
+        downlink_ring=task["downlink_ring"],
+        group_size=task["group_size"], seed=task["seed"],
+        eval_every=task["eval_every"],
+        clients_per_round=task["clients_per_round"],
+    )
+    golden = d["entries"][f"{method}/{uplink}/{downlink}"]
+    got = hist.rounds_to_target
+    assert _ratio_ok(got, golden) and _ratio_ok(golden, got), (got, golden)
+
+
 def test_golden_sharded_subprocess_quantized_both_directions():
     """engine="flat_sharded" on an 8-way host-device mesh must converge in
     the same rounds as the golden for the fully-compressed wire (int4

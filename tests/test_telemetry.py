@@ -251,6 +251,29 @@ def test_jsonl_roundtrip_and_flstat_cli(tmp_path):
     assert "weight sums ok" in out.stdout
 
 
+def test_percentiles_interpolate_linearly():
+    """report._percentile pins: linear interpolation between bracketing
+    samples (numpy's default method), not nearest-rank. The old round()
+    on the fractional rank used banker's rounding — p50 of [1,2,3,4]
+    came out 2 (round(1.5) -> 2... but round(0.5) -> 0), picking lower
+    or upper inconsistently by parity."""
+    assert report._percentile([1.0, 2.0, 3.0, 4.0], 0.50) == 2.5
+    assert report._percentile([10.0, 20.0, 30.0, 40.0, 50.0], 0.90) == 46.0
+    assert report._percentile([1.0, 2.0, 3.0, 4.0, 5.0], 0.99) == \
+        pytest.approx(4.96)
+    # exact ranks hit the sample itself
+    assert report._percentile([1.0, 2.0, 3.0], 0.50) == 2.0
+    assert report._percentile([7.0], 0.90) == 7.0
+    assert report._percentile([3.0, 9.0], 0.0) == 3.0
+    assert report._percentile([3.0, 9.0], 1.0) == 9.0
+    # numpy cross-check on an awkward span list
+    vals = sorted([0.03, 0.011, 0.8, 0.07, 0.22, 0.013, 0.4])
+    for q in (0.5, 0.9, 0.99):
+        assert report._percentile(vals, q) == \
+            pytest.approx(float(np.percentile(vals, q * 100)))
+    assert report._percentile([], 0.5) != report._percentile([], 0.5)  # nan
+
+
 def test_partial_final_block_emits_exact_round_count():
     """rounds=10 with block=8 ends on a partial block: the stream must
     hold EXACTLY 10 round events, absolute rounds 1..10, no padding."""
