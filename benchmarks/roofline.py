@@ -19,6 +19,27 @@ from typing import Iterable
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 
+_WIRE_BYTES = {"f32": 4.0, "bf16": 2.0, "int8": 1.0, "int4": 0.5}
+
+
+def flat_round_hbm_bound_us(K: int, n: int, transport: str = "f32",
+                            devices: int = 1) -> float:
+    """Model-bytes HBM floor (µs) for one flat-engine aggregation round.
+
+    The fused engine streams the (K, N) wire buffer three times — the
+    psi-aggregate, the stats pass, and the weighted aggregate — so the
+    floor is 3 * K * N * wire_bytes / HBM_BW per device (the buffer is
+    evenly tiled over `devices`; the O(N) g/delta vectors and O(K) stat
+    vectors are noise against K passes over the buffer). This is the
+    TPU-projection column printed next to measured µs by
+    `benchmarks/run.py --only engine`; on CPU the measured number is the
+    interpret-mode correctness path and sits orders of magnitude above
+    this floor by design.
+    """
+    bpe = _WIRE_BYTES[transport]
+    return 3.0 * K * n * bpe / devices / HBM_BW * 1e6
+
+
 def load_records(path: str) -> list[dict]:
     recs = {}
     with open(path) as f:

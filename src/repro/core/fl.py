@@ -84,6 +84,19 @@ class FLConfig:
     #            Requires passing `mesh=` to make_round_fn; any
     #            clients_per_round works (K % shards != 0 zero-pads the
     #            client axis — padded rows get exactly zero weight).
+    #            On a 2D (client x model) mesh — a "model" axis of size
+    #            > 1 — the buffer becomes a (client x model) grid of
+    #            (K_loc, N_loc) tiles (fl_shard_map.make_round_ops_2d):
+    #            each device ravels its LOCAL model-shard leaf blocks
+    #            (no all-gather), quantizes them shard-locally (scale
+    #            chunks never straddle a model-axis split — the 2D wire
+    #            layout), and the aggregated delta keeps model-sharded
+    #            leaves sharded. The tree engine on the same mesh
+    #            consumes the identical shard-local wire via a blocked
+    #            quantize->dequantize roundtrip, so tree and flat still
+    #            agree to 1e-5 per transport. error_feedback is
+    #            incompatible with a quantized 2D wire (the residual is
+    #            a global tree-ravel-order buffer) and raises.
     # The sequential mode's pass-2 statistics also stream through the
     # round_stats kernel (K=1 rows against the raveled global delta), so
     # all modes share one stats implementation.
@@ -688,7 +701,14 @@ def make_round_fn(loss_fn: Callable, fl: FLConfig,
     stacked deltas (parallel mode). `mesh` is required by
     engine="flat_sharded" (the client axis of the flat buffer is sharded
     over the mesh's ("pod","data") axes; K not divisible by the client
-    axis is zero-padded before sharding) and ignored otherwise.
+    axis is zero-padded before sharding). If the mesh also has a "model"
+    axis of size > 1, the flat buffer becomes a 2D (client x model) tile
+    grid — model-sharded leaves (models/sharding.param_pspecs rules)
+    ravel shard-locally, quantization chunks are shard-local, and the
+    aggregate keeps sharded leaves sharded; the TREE engine on such a
+    mesh routes quantized transports through the same shard-local wire
+    (fl_shard_map.make_blocked_roundtrip), so engine equivalence holds
+    per transport on the 2D mesh too. Otherwise `mesh` is ignored.
 
     With `fl.error_feedback` the round reads and rewrites `state.ef`
     ((num_clients, N) f32, rows of unselected clients untouched); with
@@ -817,23 +837,54 @@ def _down_byte_split(fl: FLConfig, n: int, ver_rows, v, pulled=None):
 
 
 def _pad_rows(a, kp: int, fill=0.0):
-    """Pad axis 0 to kp rows with a constant (client-axis shard padding)."""
+    """Pad axis 0 to kp rows with a constant (client-axis shard padding).
+
+    jnp.pad, NOT concatenate-with-a-zero-block: XLA's SPMD partitioner has
+    been observed to mis-partition a concatenate feeding a shard_map region
+    on 2D (client x model) host-device meshes, silently corrupting the
+    padded buffer; a pad op partitions correctly.
+    """
     k = a.shape[0]
     if kp == k:
         return a
-    pad = jnp.full((kp - k,) + a.shape[1:], fill, a.dtype)
-    return jnp.concatenate([a, pad])
+    return jnp.pad(a, [(0, kp - k)] + [(0, 0)] * (a.ndim - 1),
+                   constant_values=jnp.asarray(fill, a.dtype))
+
+
+def _derive_param_pspecs(params, mesh):
+    """UNSTACKED param PartitionSpecs for the 2D wire (config-derived:
+    the same name-based rules the launch layer shards params with)."""
+    from repro.models import sharding as models_sharding
+
+    return models_sharding.param_pspecs(params, mesh)
 
 
 def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=None,
                          grad_constraint=None, mesh=None):
     round_ops = None
+    # A mesh with a "model" axis of size > 1 switches the wire to the 2D
+    # (client x model) blocked layout: quantization chunks are SHARD-LOCAL
+    # (never straddling a model-axis split), model-sharded leaves are
+    # raveled per shard (no all-gather), and the flat engine's aggregate
+    # keeps sharded leaves sharded. The tree engine consumes the same
+    # wire through fl_shard_map.make_blocked_roundtrip.
+    wire_2d = (mesh is not None and fl.engine in ("tree", "flat_sharded")
+               and fl_shard_map.model_axis_size(mesh) > 1)
+    if wire_2d and fl.transport != "f32" and fl.error_feedback:
+        raise ValueError(
+            "error_feedback carries a global (num_clients, N) residual in "
+            "tree-ravel order, but a (client x model) mesh quantizes the "
+            "wire in shard-local blocked order; drop error_feedback or "
+            "use a client-only mesh")
     if fl.engine == "flat_sharded":
-        round_ops = fl_shard_map.make_round_ops(
-            mesh, alpha=fl.alpha, method=fl.method,
-            interpret=_resolve_interpret(fl), transport=fl.transport,
-            group_size=fl.group_size)
-        row_sharding = fl_shard_map.flat_client_sharding(mesh)
+        csize = fl_shard_map.client_axis_size(mesh)
+        if not wire_2d:
+            round_ops = fl_shard_map.make_round_ops(
+                mesh, alpha=fl.alpha, method=fl.method,
+                interpret=_resolve_interpret(fl), transport=fl.transport,
+                group_size=fl.group_size)
+            row_sharding = fl_shard_map.flat_client_sharding(mesh)
+    elif wire_2d:
         csize = fl_shard_map.client_axis_size(mesh)
 
     def round_fn(state: RoundState, batches, sel_idx, data_sizes):
@@ -907,7 +958,23 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
         new_ef = ef_state
 
         # ---- client uplink: compress the stacked deltas to the wire ----
-        if fl.transport != "f32":
+        if fl.transport != "f32" and wire_2d:
+            # 2D (client x model) mesh: the wire is quantized per-shard in
+            # blocked order (see fl_shard_map.make_round_ops_2d). The
+            # flat_sharded engine quantizes INSIDE its region; the tree
+            # engine consumes the identical reconstruction through the
+            # blocked roundtrip region here (per-leaf reference reductions
+            # then run on the dequantized tree, so "tree never reads the
+            # wire buffer" still holds).
+            if fl.engine == "tree":
+                k = data_sizes.shape[0]
+                kp = -(-k // csize) * csize
+                deltas_p = jax.tree.map(lambda d: _pad_rows(d, kp), deltas)
+                rt = fl_shard_map.make_blocked_roundtrip(
+                    mesh, deltas_p, _derive_param_pspecs(params, mesh),
+                    transport=fl.transport, group_size=fl.group_size)
+                deltas = jax.tree.map(lambda d: d[:k], rt(deltas_p))
+        elif fl.transport != "f32":
             flat0, unravel0 = treemath.tree_ravel_stacked(deltas)
             if fl.error_feedback:
                 # EF-SGD: replay the carried residual into this round's
@@ -930,13 +997,44 @@ def _make_parallel_round(loss_fn, fl: FLConfig, delta_constraint, angle_pred=Non
 
         # (N,) 0/1 segment mask over the ravel order — ONE copy shared by
         # both flat engines (the tree engine masks per-leaf views instead),
-        # so the angle_filter semantics cannot fork between them.
+        # so the angle_filter semantics cannot fork between them. The 2D
+        # engine bakes the same per-leaf keep flags into its shard-local
+        # blocked mask instead (treemath.blocked_segment_mask).
         maskv = None
-        if fl.engine != "tree" and angle_pred:
+        if fl.engine != "tree" and angle_pred and not wire_2d:
             maskv = treemath.segment_mask(params,
                                           angle_keep_list(params, angle_pred))
 
-        if fl.engine == "flat_sharded":
+        if fl.engine == "flat_sharded" and wire_2d:
+            # one shard_map region over the (client x model) tile grid:
+            # per-tile shard-local ravel + quantize + fused kernels, stat
+            # psums over both axes, replicated Eq.9 + Gompertz, aggregate
+            # psum over the client axis only — model-sharded leaves come
+            # back still sharded (no full-N gather anywhere).
+            k = data_sizes.shape[0]
+            kp = -(-k // csize) * csize
+            deltas_p = jax.tree.map(lambda d: _pad_rows(d, kp), deltas)
+            keep = (angle_keep_list(params, angle_pred)
+                    if angle_pred else None)
+            round_ops_2d = fl_shard_map.make_round_ops_2d(
+                mesh, deltas_p, _derive_param_pspecs(params, mesh),
+                alpha=fl.alpha, method=fl.method,
+                interpret=_resolve_interpret(fl), transport=fl.transport,
+                group_size=fl.group_size, keep=keep)
+            # padded rows: zero deltas, zero data size -> -inf softmax
+            # logit -> exactly zero weight and zero stats contribution.
+            g_avg, dots, sqs, sqg, delta, theta, _, w = round_ops_2d(
+                deltas_p, _pad_rows(psi_avg, kp),
+                _pad_rows(angle_state.smoothed[sel_idx], kp),
+                _pad_rows(angle_state.count[sel_idx], kp),
+                _pad_rows(data_sizes, kp))
+            dots, sqs = dots[:k], sqs[:k]
+            theta, w = theta[:k], w[:k]
+            # f32 in-region accumulate, ONE cast to the param leaf dtype —
+            # the same rounding schedule as the 1D engines' unravel.
+            delta = jax.tree.map(lambda d, p: d.astype(p.dtype), delta,
+                                 params)
+        elif fl.engine == "flat_sharded":
             # the WHOLE round is one shard_map call (stats psums ->
             # replicated Eq.9 + Gompertz weighting -> aggregate psum):
             # rows sharded over ("pod","data"), per-shard fused kernels.
@@ -1109,6 +1207,20 @@ def _make_buffered_round(loss_fn, fl: FLConfig, delta_constraint,
             interpret=_resolve_interpret(fl))
         row_sharding = fl_shard_map.flat_client_sharding(mesh)
         csize = fl_shard_map.client_axis_size(mesh)
+        # 2D (client x model) mesh: the flush region also tiles the
+        # buffer's COLUMNS over the model axis (admission stays the
+        # global f32 buffer — only the flush's layout changes). Columns
+        # are zero-padded to a multiple of the model-axis size and the
+        # model-sharded outputs sliced back below.
+        msize = fl_shard_map.model_axis_size(mesh)
+        if msize > 1:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            caxes = fl_shard_map._client_axes(mesh)
+            row_sharding = NamedSharding(
+                mesh, PartitionSpec(
+                    caxes if len(caxes) > 1 else caxes[0],
+                    fl_shard_map.MODEL_AXIS))
 
     def round_fn(state: RoundState, batches, sel_idx, data_sizes):
         if state.buf is None:
@@ -1254,10 +1366,17 @@ def _make_buffered_round(loss_fn, fl: FLConfig, delta_constraint,
             # same single-region schedule as the sync round, over the f32
             # report rows; padded rows land False -> exactly zero weight.
             kp = -(-k // csize) * csize
-            values = jax.lax.with_sharding_constraint(
-                _pad_rows(buf.data, kp), row_sharding)
+            n = buf.data.shape[1]
+            npad = -(-n // msize) * msize
+            values = _pad_rows(buf.data, kp)
             mvec = (maskv if maskv is not None
-                    else jnp.ones((buf.data.shape[1],), jnp.float32))
+                    else jnp.ones((n,), jnp.float32))
+            if npad != n:
+                # zero columns: zero in both rows and aggregate, so every
+                # stat contribution is exactly zero; sliced off below.
+                values = jnp.pad(values, ((0, 0), (0, npad - n)))
+                mvec = jnp.pad(mvec, (0, npad - n))
+            values = jax.lax.with_sharding_constraint(values, row_sharding)
             g_flat, dots, sqs, sqg, delta_flat, theta, _, w = flush_ops(
                 values, _pad_rows(psi_b, kp), mvec,
                 _pad_rows(angle_state.smoothed[buf.slot], kp),
@@ -1266,6 +1385,9 @@ def _make_buffered_round(loss_fn, fl: FLConfig, delta_constraint,
                 _pad_rows(landed, kp, False))
             dots, sqs = dots[:k], sqs[:k]
             theta, w = theta[:k], w[:k]
+            if npad != n:
+                g_flat = g_flat[:n]
+                delta_flat = delta_flat[:n]
             g_avg = unravel0(g_flat, jnp.float32)
             delta = unravel0(delta_flat)
         elif fl.engine == "flat":

@@ -23,8 +23,14 @@ Two engines share this schedule:
   (1)(2)(4) run as the fused Pallas kernels (`kernels.weighted_agg`,
   `kernels.round_stats`) on each shard's rows, followed by the same psums.
   This is the scalable large-cohort path: per-device work is one HBM pass
-  over K/num_shards rows regardless of K. It requires client-only
-  sharding (each client's delta row is contiguous on its shard).
+  over K/num_shards rows regardless of K. On a client-only mesh each
+  client's delta row is contiguous on its shard; on a 2D (client x
+  model) mesh the buffer becomes a grid of (K_loc, N_loc) tiles instead
+  (`make_round_ops_2d`) — each model shard ravels its LOCAL leaf blocks
+  (treemath.blocked_ravel_local, no all-gather), quantization chunks are
+  shard-local (the 2D wire layout), dots/sqnorms psum over both axes and
+  the aggregates over the client axis only, so model-sharded leaves stay
+  sharded end-to-end, for flat exactly as for tree.
 
 `make_round_ops` packages the whole flat round — stats psums, the
 replicated O(K) weighting, and the aggregate psum — as ONE shard_map
@@ -64,6 +70,9 @@ from repro.kernels import weighted_agg as weighted_agg_mod
 PyTree = Any
 
 
+MODEL_AXIS = "model"
+
+
 def _client_axes(mesh: Mesh):
     caxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     if not caxes:
@@ -71,6 +80,14 @@ def _client_axes(mesh: Mesh):
             f"mesh axes {mesh.axis_names} contain no client axis — the "
             "FedAdp client dimension shards over ('pod', 'data')")
     return caxes
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    """Size of the mesh's "model" axis (1 when absent): > 1 selects the
+    2D (client x model) layout for the flat engine."""
+    if mesh is None or MODEL_AXIS not in mesh.axis_names:
+        return 1
+    return int(mesh.shape[MODEL_AXIS])
 
 
 def client_axis_size(mesh: Mesh) -> int:
@@ -226,6 +243,201 @@ def make_round_ops(mesh: Mesh, *, alpha: float, method: str = "fedadp",
         in_specs=(row_spec,) + (P(),) * 5, out_specs=outs)
 
 
+def _spec_tree(pspecs):
+    """(leaves, unflatten) over a PartitionSpec tree."""
+    is_p = lambda x: isinstance(x, P)
+    leaves = jax.tree.leaves(pspecs, is_leaf=is_p)
+    structure = jax.tree.structure(pspecs, is_leaf=is_p)
+    return leaves, lambda ls: jax.tree.unflatten(structure, ls)
+
+
+def _stacked_specs(pspecs, caxis):
+    """Stacked-delta specs: client axis leading, param dims per pspec."""
+    leaves, tree_of = _spec_tree(pspecs)
+    return tree_of([P(caxis, *tuple(s)) for s in leaves])
+
+
+def _blocked_unstack_local(vec, layout, *, dtypes=None, gather_rows=False):
+    """Per-leaf outputs from a blocked (…, width) array, inside the region.
+
+    A model-sharded leaf's segment IS its local block (reshape only — the
+    leaf stays sharded); a replicated leaf's column slices are re-joined
+    with a small all_gather over the model axis (O(leaf size), never the
+    full buffer). `gather_rows=True` handles (k_loc, width) row blocks
+    (gather on axis 1), else (width,) vectors.
+    """
+    import math as _math
+
+    m = layout.n_shards
+    segs = treemath.blocked_split(vec, layout)
+    out = []
+    for i, (seg, shape, sdim) in enumerate(
+            zip(segs, layout.shapes, layout.sharded_dims)):
+        dt = layout.dtypes[i] if dtypes is None else dtypes
+        lead = vec.shape[:-1]
+        if sdim >= 0:
+            local = list(shape)
+            local[sdim] //= m
+            out.append(seg.reshape(lead + tuple(local)).astype(dt))
+        else:
+            axis = 1 if gather_rows else 0
+            full = jax.lax.all_gather(seg, MODEL_AXIS, axis=axis,
+                                      tiled=True)
+            size = _math.prod(shape) if shape else 1
+            full = jax.lax.slice_in_dim(full, 0, size, axis=axis)
+            out.append(full.reshape(lead + shape).astype(dt))
+    return out
+
+
+def make_round_ops_2d(mesh: Mesh, template_stacked: PyTree, pspecs: PyTree,
+                      *, alpha: float, method: str = "fedadp",
+                      interpret: bool = True, transport: str = "f32",
+                      group_size: int = 0, keep=None):
+    """`make_round_ops` on a 2D (client x model) mesh — tree in, tree out.
+
+    The flat buffer becomes a P(caxis, "model") grid of (K_loc, N_loc)
+    tiles: each device RAVELS its local stacked leaf blocks in-region
+    (treemath.blocked_ravel_local — model-sharded leaves reshape locally,
+    replicated leaves ceil-split column-wise, so no leaf is ever gathered
+    to full width), quantizes them shard-locally (transport != "f32":
+    int8/int4 scale chunks are per-shard, never straddling a model-axis
+    split — THE wire layout on 2D meshes), and runs the fused kernels on
+    its tile. Partial dots/sqnorms psum over BOTH axes; sqg over the
+    model axis only (g is already client-reduced); the replicated Eq. 9 +
+    Gompertz softmax stays scalar; and the two aggregates psum over the
+    client axis ONLY — aggregated columns stay model-sharded, so the tree
+    contract's "keeps sharded leaves sharded" now holds for flat too
+    (replicated leaves re-join via an O(leaf) all_gather of their column
+    slices).
+
+    `template_stacked`/`pspecs`: the K-stacked delta tree (leading axis
+    padded to the client-axis size) and the UNSTACKED param
+    PartitionSpecs (models/sharding.param_pspecs — buffer sharding is
+    config-derived). `keep`: per-leaf bool angle-filter flags (None =
+    all; replaces the 1D form's mask operand, baked as a shard-identical
+    (N_loc,) constant).
+
+    Returns round_op(deltas_stacked, psi, smoothed_sel, count_sel,
+    data_sizes) -> (g_tree, dots, sqs, sqg, delta_tree, theta, theta_sm,
+    w): the 1D op's 8-tuple with the two flat vectors replaced by
+    UNSTACKED f32 trees, sharded per `pspecs`.
+    """
+    caxes = _client_axes(mesh)
+    caxis = caxes if len(caxes) > 1 else caxes[0]
+    msize = model_axis_size(mesh)
+    if msize <= 1:
+        raise ValueError(
+            "make_round_ops_2d needs a mesh with a 'model' axis of size "
+            "> 1; use make_round_ops for client-only sharding")
+    layout = treemath.blocked_layout(template_stacked, pspecs, msize,
+                                     MODEL_AXIS)
+    if transport == "int4":
+        from repro import transport as transport_mod
+
+        group_size = group_size or transport_mod.GROUP_SIZE
+        transport_mod.validate_group_size(group_size)
+    mask_const = treemath.blocked_segment_mask(layout, keep)
+    n_loc = layout.width
+    kw = dict(transport=transport, group_size=group_size)
+
+    def _body(deltas, psi, smoothed_sel, count_sel, data_sizes):
+        j = jax.lax.axis_index(MODEL_AXIS)
+        x = treemath.blocked_ravel_local(jax.tree.leaves(deltas), layout, j)
+        if transport == "f32":
+            values, scales = x, None
+        else:
+            from repro import transport as transport_mod
+
+            q = transport_mod.quantize(
+                x, transport,
+                group_size=group_size or transport_mod.GROUP_SIZE)
+            values, scales = q.values, q.scales
+        my = _shard_slots(x, caxis)
+        g_loc = jax.lax.psum(
+            _shard_agg(psi[my], values, scales, interpret, n=n_loc, **kw),
+            caxis)
+        d_loc, s_loc, sqg_loc = _shard_stats(values, scales, g_loc,
+                                             mask_const, interpret, **kw)
+        kp = psi.shape[0]
+        both = caxes + (MODEL_AXIS,)
+        dots = jax.lax.psum(
+            jnp.zeros((kp,), jnp.float32).at[my].set(d_loc), both)
+        sqs = jax.lax.psum(
+            jnp.zeros((kp,), jnp.float32).at[my].set(s_loc), both)
+        sqg = jax.lax.psum(sqg_loc, MODEL_AXIS)
+        theta = weighting.instantaneous_angle(dots, sqs, sqg)
+        cnt = count_sel.astype(jnp.float32) + 1.0
+        theta_sm = ((cnt - 1.0) * smoothed_sel + theta) / cnt  # Eq. 9
+        if method == "fedadp":
+            w = weighting.fedadp_weights(theta_sm, data_sizes, alpha)
+            delta_loc = jax.lax.psum(
+                _shard_agg(w[my], values, scales, interpret, n=n_loc, **kw),
+                caxis)
+        else:  # w == psi: the stats' aggregate IS the round delta
+            w = psi
+            delta_loc = g_loc
+        g_tree = jax.tree.unflatten(
+            jax.tree.structure(deltas),
+            _blocked_unstack_local(g_loc, layout, dtypes=jnp.float32))
+        delta_tree = jax.tree.unflatten(
+            jax.tree.structure(deltas),
+            _blocked_unstack_local(delta_loc, layout, dtypes=jnp.float32))
+        return g_tree, dots, sqs, sqg, delta_tree, theta, theta_sm, w
+
+    spec_leaves, tree_of = _spec_tree(pspecs)
+    unstacked = tree_of(spec_leaves)
+    in_specs = (_stacked_specs(pspecs, caxis), P(), P(), P(), P())
+    out_specs = (unstacked, P(), P(), P(), unstacked, P(), P(), P())
+    return _shard_map(_body, mesh, in_specs, out_specs)
+
+
+def make_blocked_roundtrip(mesh: Mesh, template_stacked: PyTree,
+                           pspecs: PyTree, *, transport: str,
+                           group_size: int = 0):
+    """Shard-local wire roundtrip for the TREE engine on a 2D mesh.
+
+    On a (client x model) mesh the uplink wire is quantized per
+    (client, model-shard) block — scale chunks are shard-local (see
+    `make_round_ops_2d`). The tree reference must consume the SAME
+    reconstruction without ever raveling a model-sharded leaf to full
+    width (the global `tree_ravel_stacked` + quantize path would
+    all-gather it): this region ravels each shard's local blocks, runs
+    quantize -> dequantize on the (K_loc, N_loc) tile, and returns the
+    STACKED f32 reconstruction — zero collectives for model-sharded
+    leaves, an O(leaf) all_gather to re-join each replicated leaf's
+    column slices. The tree engine then runs its per-leaf reference
+    reductions on the result, preserving the "tree never reads the wire
+    buffer" contract (it reads the dequantized tree).
+
+    Returns roundtrip(deltas_stacked) -> stacked f32 tree, sharded like
+    the input (client axis leading, tensor dims per `pspecs`).
+    """
+    caxes = _client_axes(mesh)
+    caxis = caxes if len(caxes) > 1 else caxes[0]
+    msize = model_axis_size(mesh)
+    layout = treemath.blocked_layout(template_stacked, pspecs, msize,
+                                     MODEL_AXIS)
+    from repro import transport as transport_mod
+
+    if transport == "int4":
+        group_size = group_size or transport_mod.GROUP_SIZE
+        transport_mod.validate_group_size(group_size)
+
+    def _body(deltas):
+        j = jax.lax.axis_index(MODEL_AXIS)
+        x = treemath.blocked_ravel_local(jax.tree.leaves(deltas), layout, j)
+        q = transport_mod.quantize(
+            x, transport, group_size=group_size or transport_mod.GROUP_SIZE)
+        recon = transport_mod.dequantize(q)  # (k_loc, N_loc) f32
+        return jax.tree.unflatten(
+            jax.tree.structure(deltas),
+            _blocked_unstack_local(recon, layout, dtypes=jnp.float32,
+                                   gather_rows=True))
+
+    stacked = _stacked_specs(pspecs, caxis)
+    return _shard_map(_body, mesh, in_specs=(stacked,), out_specs=stacked)
+
+
 def make_buffered_flush_ops(mesh: Mesh, *, alpha: float,
                             method: str = "fedadp", beta: float = 0.0,
                             interpret: bool = True):
@@ -249,9 +461,21 @@ def make_buffered_flush_ops(mesh: Mesh, *, alpha: float,
     landed) -> (g_flat, dots, sqs, sqg, delta_flat, theta, theta_sm, w),
     mirroring `make_round_ops`' output row so core/fl.py's buffered path
     consumes both identically.
+
+    On a 2D (client x model) mesh the buffer's COLUMNS also shard: the
+    report buffer stays a global f32 (K, Np) array (admission is
+    unchanged — it dequantizes at landing), but Np must be padded to a
+    multiple of the model-axis size (core/fl.py pads with zero columns
+    and slices the outputs back) and values/mask ride in as
+    P(caxis, "model") / P("model") tiles. Each device flushes its
+    (K_loc, Np/msize) tile; dots/sqs psum over both axes, sqg over the
+    model axis, and the two aggregates psum over the client axis only —
+    g_flat/delta_flat come back as model-sharded (Np,) vectors.
     """
     caxis = _client_axis(mesh)
-    row_spec = P(caxis)
+    caxes = _client_axes(mesh)
+    msize = model_axis_size(mesh)
+    stat_axes = caxes + (MODEL_AXIS,) if msize > 1 else caxes
 
     def _body(values, psi, mask, smoothed_sel, count_sel, sizes, age,
               landed):
@@ -265,9 +489,11 @@ def make_buffered_flush_ops(mesh: Mesh, *, alpha: float,
             values, g_flat, mask, interpret=interpret)
         k = psi.shape[0]
         dots = jax.lax.psum(
-            jnp.zeros((k,), jnp.float32).at[my].set(d_loc), caxis)
+            jnp.zeros((k,), jnp.float32).at[my].set(d_loc), stat_axes)
         sqs = jax.lax.psum(
-            jnp.zeros((k,), jnp.float32).at[my].set(s_loc), caxis)
+            jnp.zeros((k,), jnp.float32).at[my].set(s_loc), stat_axes)
+        if msize > 1:
+            sqg = jax.lax.psum(sqg, MODEL_AXIS)
         theta = weighting.instantaneous_angle(dots, sqs, sqg)
         cnt = count_sel.astype(jnp.float32) + 1.0
         theta_sm = ((cnt - 1.0) * smoothed_sel + theta) / cnt  # Eq. 9
@@ -282,7 +508,13 @@ def make_buffered_flush_ops(mesh: Mesh, *, alpha: float,
             caxis)
         return g_flat, dots, sqs, sqg, delta_flat, theta, theta_sm, w
 
-    return _shard_map(_body, mesh, in_specs=(row_spec,) + (P(),) * 7,
+    if msize > 1:
+        col = P(MODEL_AXIS)
+        return _shard_map(
+            _body, mesh,
+            in_specs=(P(caxis, MODEL_AXIS), P(), col) + (P(),) * 5,
+            out_specs=(col, P(), P(), P(), col, P(), P(), P()))
+    return _shard_map(_body, mesh, in_specs=(P(caxis),) + (P(),) * 7,
                       out_specs=(P(),) * 8)
 
 
@@ -424,6 +656,13 @@ def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
     its contiguous (K_loc, N) rows, and the whole round is ONE shard_map
     region (`make_round_ops`). transport != "f32" compresses the raveled
     buffer to the wire dtype first; the kernels dequantize in-register.
+
+    On a 2D (client x model) mesh — `mesh.axis_names` containing "model"
+    with size > 1 — the flat buffer becomes a (client x model) grid of
+    tiles instead (`make_round_ops_2d`): model-sharded leaves ravel
+    shard-locally (no all-gather), quantization chunks are shard-local
+    (the 2D wire layout), and the aggregated delta keeps its model
+    sharding, so the old "client-only sharding" restriction is gone.
     """
     from repro import transport as transport_mod
 
@@ -431,12 +670,17 @@ def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
         group_size = transport_mod.GROUP_SIZE
     spec_leaves = jax.tree.leaves(delta_pspecs,
                                   is_leaf=lambda x: isinstance(x, P))
+    if model_axis_size(mesh) > 1:
+        return _fedadp_aggregate_flat_2d(
+            mesh, delta_pspecs, alpha=alpha, method=method,
+            interpret=interpret, transport=transport, group_size=group_size)
     for s in spec_leaves:
         if any(e is not None for e in tuple(s)[1:]):
             raise ValueError(
                 "engine='flat' ravels each client's delta into one "
                 f"contiguous row and requires client-only sharding; got {s} "
-                "(use engine='tree' for model-axis-sharded leaves)")
+                "(add a 'model' mesh axis for the 2D flat engine, or use "
+                "engine='tree' for model-axis-sharded leaves)")
     round_op = make_round_ops(mesh, alpha=alpha, method=method,
                               interpret=interpret, transport=transport,
                               group_size=group_size)
@@ -466,5 +710,36 @@ def _fedadp_aggregate_flat(mesh: Mesh, delta_pspecs: PyTree, *, alpha: float,
         _, _, _, _, delta_flat, theta, theta_sm, w = round_op(
             *wire, psi_avg, ones, smoothed_prev, count_prev, data_sizes)
         return unravel(delta_flat, jnp.float32), theta, theta_sm, w
+
+    return body
+
+
+def _fedadp_aggregate_flat_2d(mesh: Mesh, delta_pspecs: PyTree, *,
+                              alpha: float, method: str, interpret: bool,
+                              transport: str, group_size: int):
+    """`fedadp_aggregate(engine="flat")` on a (client x model) mesh."""
+    spec_leaves = jax.tree.leaves(delta_pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+    tree_of = lambda ls: jax.tree.unflatten(
+        jax.tree.structure(delta_pspecs,
+                           is_leaf=lambda x: isinstance(x, P)), ls)
+    pspecs = tree_of([P(*tuple(s)[1:]) for s in spec_leaves])
+
+    def body(deltas, data_sizes, smoothed_prev, count_prev):
+        k = data_sizes.shape[0]
+        csize = client_axis_size(mesh)
+        if k % csize:
+            raise ValueError(
+                f"engine='flat' needs K divisible by the client-axis size "
+                f"(K={k}, client axis {csize}); pad the cohort or use "
+                "engine='tree'")
+        round_op = make_round_ops_2d(
+            mesh, deltas, pspecs, alpha=alpha, method=method,
+            interpret=interpret, transport=transport,
+            group_size=group_size)
+        psi_avg = weighting.fedavg_weights(data_sizes)
+        _, _, _, _, delta_tree, theta, theta_sm, w = round_op(
+            deltas, psi_avg, smoothed_prev, count_prev, data_sizes)
+        return delta_tree, theta, theta_sm, w
 
     return body

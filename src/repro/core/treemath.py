@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -240,6 +240,146 @@ def tree_unravel_stacked(template: PyTree, buf: jax.Array,
     dtypes = tuple(jnp.dtype(dtype if dtype is not None else l.dtype)
                    for l in leaves)
     return _cached_unravel_rows(treedef, shapes, dtypes)(buf)
+
+
+# ---------------------------------------------------------------------------
+# 2D (client x model) blocked ravel — the flat engine on model-sharded
+# meshes. `tree_ravel_stacked` concatenates every leaf's full row, which
+# forces GSPMD to all-gather model-sharded leaves; the blocked layout
+# instead ravels each MODEL SHARD's local leaf blocks into a per-shard
+# column block, inside the shard_map region, so sharded leaves never
+# materialize at full width. Every shard's block has the same width (leaf
+# segments at the same offsets): a model-sharded leaf contributes its
+# exact local size, a replicated leaf is ceil-split into n_shards column
+# slices (zero-padded on the last shard). The padding self-masks — padded
+# positions are zero in both the rows and the aggregate, so every dot /
+# sqnorm contribution is exactly zero. NOTE the blocked element order is a
+# (per-shard) permutation of `tree_ravel_stacked`'s order: all the round's
+# reductions are permutation-invariant, but quantization chunk/group
+# boundaries become SHARD-LOCAL — that is the wire layout contract for 2D
+# meshes (scales never straddle a model-axis split).
+# ---------------------------------------------------------------------------
+
+
+class BlockedLayout(NamedTuple):
+    """Static description of the per-shard column block (hashable)."""
+    n_shards: int
+    width: int  # per-shard block width N_loc (sum of per-leaf widths)
+    n_logical: int  # global unpadded element count (sum of leaf sizes)
+    shapes: tuple  # unstacked global leaf shapes
+    dtypes: tuple  # leaf dtypes
+    sharded_dims: tuple  # per leaf: model-sharded dim (unstacked) or -1
+    widths: tuple  # per leaf: its per-shard segment width
+
+
+def blocked_layout(stacked: PyTree, pspecs: PyTree, n_shards: int,
+                   model_axis: str = "model") -> BlockedLayout:
+    """Build the (client x model) block plan for a K-stacked delta tree.
+
+    `stacked`: leaves (K, ...) (arrays or ShapeDtypeStructs); `pspecs`:
+    the UNSTACKED param PartitionSpec tree (models/sharding.param_pspecs).
+    A leaf whose spec puts `model_axis` on some dim is model-sharded
+    (that dim must divide by n_shards — param_pspecs only shards
+    divisible dims); every other leaf is replicated over the model axis
+    and ceil-split column-wise.
+    """
+    from jax.sharding import PartitionSpec
+
+    leaves = jax.tree_util.tree_leaves(stacked)
+    spec_leaves = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    assert len(leaves) == len(spec_leaves), "stacked/pspec leaf mismatch"
+    shapes, dtypes, sharded_dims, widths = [], [], [], []
+    for leaf, spec in zip(leaves, spec_leaves):
+        shape = tuple(leaf.shape[1:])
+        entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+        sdim = -1
+        for d, entry in enumerate(entries):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            if model_axis in names:
+                if entry != model_axis:
+                    raise ValueError(
+                        f"leaf spec {spec} mixes {model_axis!r} with other "
+                        "axes on one dim — unsupported by the blocked ravel")
+                if sdim >= 0:
+                    raise ValueError(
+                        f"leaf spec {spec} shards {model_axis!r} twice")
+                sdim = d
+        size = math.prod(shape) if shape else 1
+        if sdim >= 0:
+            if shape[sdim] % n_shards:
+                raise ValueError(
+                    f"model-sharded dim {sdim} of shape {shape} not "
+                    f"divisible by {n_shards}")
+            w = size // n_shards
+        else:
+            w = -(-size // n_shards)  # ceil split, zero-padded last shard
+        shapes.append(shape)
+        dtypes.append(jnp.dtype(leaf.dtype))
+        sharded_dims.append(sdim)
+        widths.append(w)
+    return BlockedLayout(
+        n_shards=n_shards, width=sum(widths),
+        n_logical=sum(math.prod(s) if s else 1 for s in shapes),
+        shapes=tuple(shapes), dtypes=tuple(dtypes),
+        sharded_dims=tuple(sharded_dims), widths=tuple(widths))
+
+
+def blocked_ravel_local(stacked_local_leaves: list, layout: BlockedLayout,
+                        shard_index) -> jax.Array:
+    """Ravel this model shard's local stacked leaf blocks to (k_loc, width).
+
+    Runs INSIDE a shard_map region: `stacked_local_leaves` are the local
+    blocks ((k_loc, *local_shape) for sharded leaves, (k_loc, *shape) for
+    replicated ones) and `shard_index` is lax.axis_index(model_axis) — a
+    traced scalar selecting each replicated leaf's column slice. Pure
+    (no collectives), f32 out.
+    """
+    m = layout.n_shards
+    parts = []
+    for x, sdim, w in zip(stacked_local_leaves, layout.sharded_dims,
+                          layout.widths):
+        k_loc = x.shape[0]
+        xf = x.reshape(k_loc, -1).astype(jnp.float32)
+        if sdim >= 0:
+            parts.append(xf)  # local block IS this shard's segment
+        else:
+            pad = m * w - xf.shape[1]
+            if pad:
+                xf = jnp.pad(xf, ((0, 0), (0, pad)))
+            parts.append(jax.lax.dynamic_slice_in_dim(
+                xf, shard_index * w, w, axis=1))
+    return jnp.concatenate(parts, axis=1)
+
+
+def blocked_split(arr: jax.Array, layout: BlockedLayout) -> list:
+    """Split a blocked (..., width) array back into per-leaf segments
+    (static offsets; inverse of blocked_ravel_local's concatenation)."""
+    out, off = [], 0
+    for w in layout.widths:
+        out.append(jax.lax.slice_in_dim(arr, off, off + w, axis=-1))
+        off += w
+    return out
+
+
+def blocked_segment_mask(layout: BlockedLayout, keep=None) -> jax.Array:
+    """(width,) f32 0/1 mask over the blocked order — identical on every
+    shard (leaf segments sit at the same offsets in each block). `keep`
+    is one bool per leaf (None = all ones); a replicated leaf's zero
+    padding is masked out for tidiness (its rows are zero anyway).
+    """
+    if keep is None:
+        keep = [True] * len(layout.widths)
+    assert len(keep) == len(layout.widths), "keep/layout leaf mismatch"
+    # The mask must be shard-identical, so a replicated leaf's zero-padded
+    # tail (last shard only) stays at the leaf's keep value — padded
+    # positions are zero in both rows and aggregate, so they contribute
+    # exactly zero to every statistic regardless of the mask.
+    parts = [np.full(w, 1.0 if k else 0.0, np.float32)
+             for w, k in zip(layout.widths, keep)]
+    return jnp.asarray(np.concatenate(parts))
 
 
 def segment_mask(tree: PyTree, keep: list) -> jax.Array:

@@ -55,7 +55,9 @@ from repro.kernels.weighted_agg import (
     _k_chunks,
     _mask_tail_rows,
     _pad_lanes,
+    _row_block,
     _unpack_nibbles,
+    _use_fallback,
 )
 
 
@@ -106,19 +108,31 @@ def _stats_kernel_masked(x_ref, g_ref, m_ref, dots_ref, sqs_ref, sqg_ref,
         sqg_ref[0, 0] += jnp.sum(g * g)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "min_kernel_elems"))
 def round_stats(x: jax.Array, g: jax.Array, mask: jax.Array | None = None,
-                *, interpret: bool = True):
+                *, interpret: bool = True, min_kernel_elems=None):
     """(dots (K,), sqnorms (K,), sqg ()) in one pass over x: (K, N), g: (N,).
 
     mask, if given, is an (N,) 0/1 vector; statistics are computed over the
     masked subspace (mask is idempotent, so only one multiply per operand).
     Accumulates in f32 regardless of input dtype. Any K: the client axis is
     gridded in chunks, the ragged tail chunk bounds-masked in-kernel.
+    Buffers below `min_kernel_elems` elements (default SMALL_ELEMS; 0
+    forces Pallas) compute as plain XLA reductions.
     """
     K, n = x.shape
+    if _use_fallback(K, n, min_kernel_elems):
+        xf = x.astype(jnp.float32)
+        gf = g.astype(jnp.float32)
+        if mask is not None:
+            mf = mask.astype(jnp.float32)
+            xf = xf * mf[None]
+            gf = gf * mf
+        return xf @ gf, jnp.sum(xf * xf, axis=1), jnp.dot(gf, gf)
     tile, kp = _k_chunks(K)
-    block = ROWS * LANE
+    rows = _row_block(n)
+    block = rows * LANE
     x = _pad_lanes(x, block)
     g = _pad_lanes(g, block)
     if mask is not None:
@@ -127,9 +141,9 @@ def round_stats(x: jax.Array, g: jax.Array, mask: jax.Array | None = None,
     x3 = x.reshape(K, m, LANE)
     g2 = g.reshape(m, LANE)
 
-    tile_spec = pl.BlockSpec((ROWS, LANE), lambda kc, i: (i, 0))
+    tile_spec = pl.BlockSpec((rows, LANE), lambda kc, i: (i, 0))
     in_specs = [
-        pl.BlockSpec((tile, ROWS, LANE), lambda kc, i: (kc, i, 0)),
+        pl.BlockSpec((tile, rows, LANE), lambda kc, i: (kc, i, 0)),
         tile_spec,
     ]
     operands = [x3, g2]
@@ -142,7 +156,7 @@ def round_stats(x: jax.Array, g: jax.Array, mask: jax.Array | None = None,
     kvec_spec = pl.BlockSpec((tile, 1), lambda kc, i: (kc, 0))
     dots, sqs, sqg = pl.pallas_call(
         functools.partial(kernel, k=K, tile=tile),
-        grid=(kp // tile, m // ROWS),
+        grid=(kp // tile, m // rows),
         in_specs=in_specs,
         out_specs=(kvec_spec, kvec_spec,
                    pl.BlockSpec((1, 1), lambda kc, i: (0, 0))),

@@ -50,11 +50,45 @@ ROWS = 128  # per-client block: 128*128*4 B = 64 KiB
 # bounds-masked inside the kernel (no buffer copy).
 K_TILE = 32
 
+# Below this many buffer elements (K * N) the f32 wrappers dispatch to the
+# equivalent jnp/XLA expression instead of pallas_call: the kernel's fixed
+# launch cost (~1.3 ms in interpret mode, and still a full grid setup
+# compiled) dwarfs the arithmetic of a tiny round — the measured source of
+# the K=8, d=1024 flat-vs-tree cliff. The fallback computes the same f32
+# reduction (different accumulation order, same 1e-5 contract as the
+# kernels vs their oracles). Quantized wrappers are exempt: the wire's
+# per-CHUNK scale layout is a transport contract, and quantized buffers
+# only arise at sizes where the kernels already win.
+SMALL_ELEMS = 1 << 17
+
 
 def _k_chunks(k: int) -> tuple[int, int]:
     """(chunk size, padded K) for gridding the client axis."""
     tile = min(k, K_TILE)
     return tile, ((k + tile - 1) // tile) * tile
+
+
+def _row_block(n: int) -> int:
+    """Sublane block for the unquantized kernels: shrink ROWS for narrow
+    buffers so N pads to rows*LANE instead of ROWS*LANE (a d=1024 row
+    would otherwise pad 16x). Power of two in [8, ROWS]; 8 sublanes is
+    the f32 minimum tile. The quantized kernels keep ROWS — their scale
+    chunk CHUNK = ROWS*LANE is the transport wire layout."""
+    lanes = -(-n // LANE)
+    r = 8
+    while r < ROWS and r < lanes:
+        r *= 2
+    return r
+
+
+def _use_fallback(k: int, n: int, min_kernel_elems) -> bool:
+    """True when (k, n) is below the Pallas break-even point.
+
+    `min_kernel_elems=None` uses SMALL_ELEMS; 0 forces the kernel path
+    (tests pin Pallas coverage with it); a custom threshold tunes the
+    break-even per deployment."""
+    lim = SMALL_ELEMS if min_kernel_elems is None else min_kernel_elems
+    return k * n < lim
 
 
 def _pad_axis0(x: jax.Array, kp: int) -> jax.Array:
@@ -122,18 +156,28 @@ def _agg_kernel(w_ref, x_ref, y_ref, *, k, tile):
     y_ref[...] += jnp.sum(w[:, :, None] * x, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "out_dtype",
+                                    "min_kernel_elems"))
 def weighted_agg(w: jax.Array, x: jax.Array, *, interpret: bool = True,
-                 out_dtype=None):
+                 out_dtype=None, min_kernel_elems=None):
     """y[n] = sum_k w[k] x[k, n]. x: (K, N) any float dtype; f32 accumulate.
 
     `out_dtype` overrides the result dtype (default: x.dtype) — pass
     jnp.float32 when a bf16 wire buffer must aggregate into the server's
     f32 reference delta without a lossy round-trip through bf16.
+    Buffers below `min_kernel_elems` elements (default SMALL_ELEMS; 0
+    forces Pallas) compute as one XLA tensordot — the kernel's launch
+    cost dominates tiny rounds.
     """
     K, n = x.shape
+    if _use_fallback(K, n, min_kernel_elems):
+        y = jnp.tensordot(w.reshape(K).astype(jnp.float32),
+                          x.astype(jnp.float32), axes=1)
+        return y.astype(out_dtype or x.dtype)
     tile, kp = _k_chunks(K)
-    x = _pad_lanes(x, ROWS * LANE)
+    rows = _row_block(n)
+    x = _pad_lanes(x, rows * LANE)
     m = x.shape[1] // LANE
     x3 = x.reshape(K, m, LANE)
     w2 = _pad_axis0(w.reshape(K).astype(jnp.float32), kp).reshape(kp, 1)
@@ -142,12 +186,12 @@ def weighted_agg(w: jax.Array, x: jax.Array, *, interpret: bool = True,
     # tile is revisited across consecutive steps while kc accumulates.
     y = pl.pallas_call(
         functools.partial(_agg_kernel, k=K, tile=tile),
-        grid=(m // ROWS, kp // tile),
+        grid=(m // rows, kp // tile),
         in_specs=[
             pl.BlockSpec((tile, 1), lambda i, kc: (kc, 0)),
-            pl.BlockSpec((tile, ROWS, LANE), lambda i, kc: (kc, i, 0)),
+            pl.BlockSpec((tile, rows, LANE), lambda i, kc: (kc, i, 0)),
         ],
-        out_specs=pl.BlockSpec((ROWS, LANE), lambda i, kc: (i, 0)),
+        out_specs=pl.BlockSpec((rows, LANE), lambda i, kc: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, LANE), jnp.float32),
         interpret=interpret,
     )(w2, x3)
@@ -282,23 +326,30 @@ def _bdot_kernel(x_ref, g_ref, out_ref, *, k, tile):
     out_ref[...] += jnp.sum(x * g[None], axis=(1, 2))[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def batched_dot(x: jax.Array, g: jax.Array, *, interpret: bool = True):
-    """u[k] = <x[k], g>. x: (K, N), g: (N,)."""
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "min_kernel_elems"))
+def batched_dot(x: jax.Array, g: jax.Array, *, interpret: bool = True,
+                min_kernel_elems=None):
+    """u[k] = <x[k], g>. x: (K, N), g: (N,). Buffers below
+    `min_kernel_elems` elements (default SMALL_ELEMS; 0 forces Pallas)
+    compute as one XLA matvec."""
     K, n = x.shape
+    if _use_fallback(K, n, min_kernel_elems):
+        return x.astype(jnp.float32) @ g.astype(jnp.float32)
     tile, kp = _k_chunks(K)
-    x = _pad_lanes(x, ROWS * LANE)
-    g = _pad_lanes(g, ROWS * LANE)
+    rows = _row_block(n)
+    x = _pad_lanes(x, rows * LANE)
+    g = _pad_lanes(g, rows * LANE)
     m = x.shape[1] // LANE
     x3 = x.reshape(K, m, LANE)
     g2 = g.reshape(m, LANE)
 
     out = pl.pallas_call(
         functools.partial(_bdot_kernel, k=K, tile=tile),
-        grid=(kp // tile, m // ROWS),
+        grid=(kp // tile, m // rows),
         in_specs=[
-            pl.BlockSpec((tile, ROWS, LANE), lambda kc, i: (kc, i, 0)),
-            pl.BlockSpec((ROWS, LANE), lambda kc, i: (i, 0)),
+            pl.BlockSpec((tile, rows, LANE), lambda kc, i: (kc, i, 0)),
+            pl.BlockSpec((rows, LANE), lambda kc, i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((tile, 1), lambda kc, i: (kc, 0)),
         out_shape=jax.ShapeDtypeStruct((kp, 1), jnp.float32),

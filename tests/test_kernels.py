@@ -31,7 +31,7 @@ def test_grad_dot_stats(shape, dtype):
 def test_weighted_agg(k, n, dtype):
     x = jax.random.normal(jax.random.key(0), (k, n), dtype)
     w = jax.random.uniform(jax.random.key(1), (k,), jnp.float32)
-    got = weighted_agg.weighted_agg(w, x)
+    got = weighted_agg.weighted_agg(w, x, min_kernel_elems=0)
     want = ref.weighted_agg(w, x)
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32),
@@ -47,7 +47,7 @@ def test_batched_dot(k, n, dtype):
     g = jax.random.normal(jax.random.key(1), (n,), dtype)
     rtol = 1e-3 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(
-        np.asarray(weighted_agg.batched_dot(x, g)),
+        np.asarray(weighted_agg.batched_dot(x, g, min_kernel_elems=0)),
         np.asarray(ref.batched_dot(x, g)), rtol=rtol, atol=1e-2,
     )
 
@@ -58,7 +58,7 @@ def test_batched_dot(k, n, dtype):
 def test_round_stats(k, n, dtype):
     x = jax.random.normal(jax.random.key(0), (k, n), dtype)
     g = jax.random.normal(jax.random.key(1), (n,), dtype)
-    got = round_stats.round_stats(x, g)
+    got = round_stats.round_stats(x, g, min_kernel_elems=0)
     want = ref.round_stats(x, g)
     rtol = 1e-3 if dtype == jnp.float32 else 2e-2
     for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
@@ -72,13 +72,13 @@ def test_round_stats_masked(n):
     g = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
     mask = (jax.random.uniform(jax.random.key(2), (n,)) > 0.5).astype(
         jnp.float32)
-    got = round_stats.round_stats(x, g, mask)
+    got = round_stats.round_stats(x, g, mask, min_kernel_elems=0)
     want = ref.round_stats(x, g, mask)
     for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
         np.testing.assert_allclose(np.asarray(gg), np.asarray(ww), rtol=1e-3,
                                    err_msg=name)
     # masked stats == stats over the masked subspace, not a rescale
-    full = round_stats.round_stats(x, g)
+    full = round_stats.round_stats(x, g, min_kernel_elems=0)
     assert not np.allclose(np.asarray(got[1]), np.asarray(full[1]))
 
 
@@ -95,7 +95,7 @@ def test_chunked_round_stats(k, n, dtype):
     ragged K + non-multiple-of-block N padding + bf16 inputs."""
     x = jax.random.normal(jax.random.key(0), (k, n), dtype)
     g = jax.random.normal(jax.random.key(1), (n,), dtype)
-    got = round_stats.round_stats(x, g)
+    got = round_stats.round_stats(x, g, min_kernel_elems=0)
     want = ref.round_stats(x, g)
     rtol = 1e-3 if dtype == jnp.float32 else 2e-2
     for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
@@ -111,10 +111,11 @@ def test_chunked_weighted_agg_and_batched_dot(k, dtype):
     g = jax.random.normal(jax.random.key(1), (n,), dtype)
     w = jax.random.uniform(jax.random.key(2), (k,), jnp.float32)
     np.testing.assert_allclose(
-        np.asarray(weighted_agg.weighted_agg(w, x), np.float32),
+        np.asarray(weighted_agg.weighted_agg(w, x, min_kernel_elems=0),
+                   np.float32),
         np.asarray(ref.weighted_agg(w, x), np.float32), rtol=2e-2, atol=1e-2)
     np.testing.assert_allclose(
-        np.asarray(weighted_agg.batched_dot(x, g)),
+        np.asarray(weighted_agg.batched_dot(x, g, min_kernel_elems=0)),
         np.asarray(ref.batched_dot(x, g)), rtol=2e-2, atol=1e-1)
 
 
@@ -128,14 +129,14 @@ def test_chunked_round_stats_masked_across_chunk_boundary(dtype):
     # contiguous masked-out segment straddling the first block boundary,
     # as segment_mask produces for a dropped leaf
     mask = jnp.ones((n,), jnp.float32).at[16000:17000].set(0.0)
-    got = round_stats.round_stats(x, g, mask)
+    got = round_stats.round_stats(x, g, mask, min_kernel_elems=0)
     want = ref.round_stats(x, g, mask)
     rtol = 1e-3 if dtype == jnp.float32 else 2e-2
     for gg, ww, name in zip(got, want, ("dots", "sqnorms", "sqg")):
         np.testing.assert_allclose(np.asarray(gg), np.asarray(ww), rtol=rtol,
                                    atol=1e-1, err_msg=name)
     # the mask must actually bite
-    full = round_stats.round_stats(x, g)
+    full = round_stats.round_stats(x, g, min_kernel_elems=0)
     assert not np.allclose(np.asarray(got[1]), np.asarray(full[1]))
 
 
@@ -191,15 +192,83 @@ def test_q4_kernels_reject_packed_width_mismatch():
                                      group_size=32)
 
 
-def test_round_stats_bf16_accumulates_in_f32():
-    # 2^14 bf16 ones: naive bf16 accumulation saturates at 256
+@pytest.mark.parametrize("mk", [0, None])
+def test_round_stats_bf16_accumulates_in_f32(mk):
+    # 2^14 bf16 ones: naive bf16 accumulation saturates at 256. Pinned on
+    # BOTH paths — the Pallas kernel (mk=0) and the small-shape XLA
+    # fallback (mk=None: 2*2^14 < SMALL_ELEMS) share the f32 contract.
     n = 1 << 14
     x = jnp.ones((2, n), jnp.bfloat16)
     g = jnp.ones((n,), jnp.bfloat16)
-    dots, sqs, sqg = round_stats.round_stats(x, g)
+    dots, sqs, sqg = round_stats.round_stats(x, g, min_kernel_elems=mk)
     assert float(sqg) == float(n)
     np.testing.assert_allclose(np.asarray(dots), [n, n])
     np.testing.assert_allclose(np.asarray(sqs), [n, n])
+
+
+# ---- small-shape XLA fallback (the K=8, d=1024 flat-engine cliff fix) ----
+
+
+def _has_pallas_call(fn, *args, **kwargs) -> bool:
+    text = str(jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args))
+    return "pallas_call" in text
+
+
+@pytest.mark.parametrize("k,n", [(8, 1024), (1, 70001), (4, 16384)])
+def test_small_shape_fallback_matches_kernel(k, n):
+    """Below SMALL_ELEMS the wrappers dispatch to XLA; both paths must
+    agree to kernel-vs-oracle tolerance so the engine A/B cannot fork."""
+    assert k * n < weighted_agg.SMALL_ELEMS
+    x = jax.random.normal(jax.random.key(0), (k, n), jnp.float32)
+    g = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+    w = jax.random.uniform(jax.random.key(2), (k,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(weighted_agg.weighted_agg(w, x)),
+        np.asarray(weighted_agg.weighted_agg(w, x, min_kernel_elems=0)),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(weighted_agg.batched_dot(x, g)),
+        np.asarray(weighted_agg.batched_dot(x, g, min_kernel_elems=0)),
+        rtol=1e-5, atol=1e-3)
+    for a, b, name in zip(
+            round_stats.round_stats(x, g),
+            round_stats.round_stats(x, g, min_kernel_elems=0),
+            ("dots", "sqnorms", "sqg")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-3, err_msg=name)
+
+
+def test_small_shape_fallback_trace_time_dispatch():
+    """The dispatch is trace-time: a small buffer lowers with NO
+    pallas_call in the jaxpr (the cliff was the launch cost, so it must
+    not merely be masked), while min_kernel_elems=0 forces the kernel."""
+    x = jnp.ones((8, 1024), jnp.float32)
+    g = jnp.ones((1024,), jnp.float32)
+    w = jnp.ones((8,), jnp.float32)
+    assert not _has_pallas_call(weighted_agg.weighted_agg, w, x)
+    assert not _has_pallas_call(weighted_agg.batched_dot, x, g)
+    assert not _has_pallas_call(round_stats.round_stats, x, g)
+    assert _has_pallas_call(weighted_agg.weighted_agg, w, x,
+                            min_kernel_elems=0)
+    assert _has_pallas_call(round_stats.round_stats, x, g,
+                            min_kernel_elems=0)
+    # above the threshold the kernel path is the default
+    big = jnp.ones((32, 65536), jnp.float32)
+    wb = jnp.ones((32,), jnp.float32)
+    assert _has_pallas_call(weighted_agg.weighted_agg, wb, big)
+
+
+def test_row_block_adapts_to_narrow_buffers():
+    """_row_block keeps the f32 minimum sublane tile and never pads a
+    narrow buffer to the full 128*128 chunk (16x waste at d=1024)."""
+    for n, want in [(1, 8), (1024, 8), (1025, 16), (16384, 128),
+                    (10**6, 128)]:
+        assert weighted_agg._row_block(n) == want, n
+    # padded width under the adaptive block stays within 2x of N
+    for n in (1024, 5000, 20000, 70001):
+        rows = weighted_agg._row_block(n)
+        padded = -(-n // (rows * 128)) * rows * 128
+        assert padded < 2 * max(n, 8 * 128)
 
 
 def _tree(key, dtype=jnp.float32):

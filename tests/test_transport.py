@@ -732,3 +732,134 @@ def test_shard_map_flat_engine_quantized_matches_f32_loosely():
             outs["f32"][0], outs[tr][0])
         np.testing.assert_allclose(np.asarray(outs["f32"][1]),
                                    np.asarray(outs[tr][1]), atol=10 * atol)
+
+
+# ---------------------------------------------------------------------------
+# 2D (client x model) wire: quantization chunks are SHARD-LOCAL.
+# ---------------------------------------------------------------------------
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+
+def _blocked_wire_fixture(k=3, m=4, seed=0):
+    rng = np.random.default_rng(seed)
+    stacked = {
+        "wq": jnp.asarray(rng.normal(size=(k, 6, 8)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(k, 7)).astype(np.float32)),
+    }
+    pspecs = {"wq": P(None, "model"), "b": P(None)}
+    lay = treemath.blocked_layout(stacked, pspecs, m)
+    leaves = jax.tree.leaves(stacked)
+
+    def block(j):
+        loc = []
+        for x, sdim in zip(leaves, lay.sharded_dims):
+            if sdim >= 0:
+                step = x.shape[sdim + 1] // m
+                sl = [slice(None)] * x.ndim
+                sl[sdim + 1] = slice(j * step, (j + 1) * step)
+                loc.append(x[tuple(sl)])
+            else:
+                loc.append(x)
+        return treemath.blocked_ravel_local(loc, lay, j)
+
+    return stacked, lay, block
+
+
+@pytest.mark.parametrize("tr,gs", [("int8", 0), ("int4", 8)])
+def test_shard_local_scales_are_locally_determined(tr, gs):
+    """The 2D wire contract: each model shard quantizes its OWN (K, N_loc)
+    block, so a shard's values and scales depend only on that shard's
+    elements — perturbing shard i cannot move shard j's wire bytes (with
+    per-shard chunking, a scale can never straddle a model-axis split)."""
+    _, lay, block = _blocked_wire_fixture()
+    kw = dict(group_size=gs) if gs else {}
+    base = [transport.quantize(block(j), tr, **kw) for j in range(4)]
+    # perturb shard 0's elements only: scale up wq's first column block
+    stacked2, lay2, block2 = _blocked_wire_fixture()
+    stacked2["wq"] = stacked2["wq"].at[:, :, :2].mul(100.0)
+    leaves2 = jax.tree.leaves(stacked2)
+
+    def blk2(j):
+        loc = []
+        for x, sdim in zip(leaves2, lay2.sharded_dims):
+            if sdim >= 0:
+                step = x.shape[sdim + 1] // 4
+                sl = [slice(None)] * x.ndim
+                sl[sdim + 1] = slice(j * step, (j + 1) * step)
+                loc.append(x[tuple(sl)])
+            else:
+                loc.append(x)
+        return treemath.blocked_ravel_local(loc, lay2, j)
+
+    pert = [transport.quantize(blk2(j), tr, **kw) for j in range(4)]
+    # shard 0 changed...
+    assert not np.array_equal(np.asarray(base[0].values),
+                              np.asarray(pert[0].values))
+    # ...but every other shard's wire bytes AND scales are untouched
+    for j in range(1, 4):
+        np.testing.assert_array_equal(np.asarray(base[j].values),
+                                      np.asarray(pert[j].values))
+        np.testing.assert_array_equal(np.asarray(base[j].scales),
+                                      np.asarray(pert[j].scales))
+
+
+@pytest.mark.parametrize("tr,gs", [("int8", 0), ("int4", 4)])
+def test_shard_local_roundtrip_matches_per_block_reference(tr, gs):
+    """fl_shard_map's blocked roundtrip == quantize/dequantize each shard's
+    block independently with the reference quantizer — pinned without a
+    mesh by replaying the per-shard blocks by hand."""
+    _, lay, block = _blocked_wire_fixture()
+    kw = dict(group_size=gs) if gs else {}
+    for j in range(4):
+        blk = block(j)
+        rt = transport.roundtrip(blk, tr, **kw)
+        q = transport.quantize(blk, tr, **kw)
+        np.testing.assert_array_equal(np.asarray(rt),
+                                      np.asarray(transport.dequantize(q)))
+        # per-shard scale columns cover ceil(width/chunk) chunks of THIS
+        # block only — the scale count is derived from the LOCAL width
+        if tr == "int8":
+            assert q.scales.shape == (3, transport.num_chunks(lay.width))
+        else:
+            assert q.scales.shape == (3, transport.num_groups(lay.width, gs))
+
+
+def test_shard_local_chunks_differ_from_global_wire():
+    """Same logical deltas, different chunk boundaries: the 2D blocked wire
+    is NOT byte-identical to the global (1D) wire — that is by design (the
+    wire layout is mesh-derived), and exactly why the tree engine on a 2D
+    mesh must consume the blocked reconstruction rather than the global
+    one. Guards against silently 'simplifying' the tree path back to the
+    global quantizer."""
+    stacked, lay, block = _blocked_wire_fixture()
+    flat, _ = treemath.tree_ravel_stacked(stacked)
+    global_rt = np.asarray(transport.roundtrip(flat, "int8"))
+    # blocked reconstruction, reassembled into ravel order
+    k = flat.shape[0]
+    leaves = jax.tree.leaves(stacked)
+    recs = {i: [] for i in range(len(leaves))}
+    for j in range(4):
+        rt = transport.roundtrip(block(j), "int8")
+        for i, seg in enumerate(treemath.blocked_split(rt, lay)):
+            recs[i].append(seg)
+    parts = []
+    for i, (shape, sdim) in enumerate(zip(lay.shapes, lay.sharded_dims)):
+        if sdim >= 0:
+            step = shape[sdim] // 4
+            local = list(shape)
+            local[sdim] = step
+            rec = jnp.concatenate(
+                [s.reshape((k,) + tuple(local)) for s in recs[i]],
+                axis=sdim + 1)
+        else:
+            size = int(np.prod(shape)) if shape else 1
+            rec = jnp.concatenate(recs[i], axis=1)[:, :size].reshape(
+                (k,) + shape)
+        parts.append(np.asarray(rec).reshape(k, -1))
+    blocked_rt = np.concatenate(parts, axis=1)
+    # both are valid int8 reconstructions (same error envelope)...
+    assert np.max(np.abs(blocked_rt - np.asarray(flat))) < 0.1
+    assert np.max(np.abs(global_rt - np.asarray(flat))) < 0.1
+    # ...but they are different wires (different chunk boundaries)
+    assert not np.array_equal(blocked_rt, global_rt)

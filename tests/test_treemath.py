@@ -131,3 +131,133 @@ def test_segment_mask_alignment():
     np.testing.assert_array_equal(m[: sizes[0]], 1.0)
     np.testing.assert_array_equal(m[sizes[0]: sizes[0] + sizes[1]], 0.0)
     np.testing.assert_array_equal(m[sizes[0] + sizes[1]:], 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (client x model) layout — the 2D flat engine's shard-local ravel.
+# ---------------------------------------------------------------------------
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+
+def _blocked_fixture(k=3, m=4):
+    rng = np.random.default_rng(0)
+    stacked = {
+        "wq": jnp.asarray(rng.normal(size=(k, 6, 8)).astype(np.float32)),
+        "w_down": jnp.asarray(rng.normal(size=(k, 8, 5)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(k, 7)).astype(np.float32)),
+        "s": jnp.asarray(rng.normal(size=(k,)).astype(np.float32)),
+    }
+    pspecs = {"wq": P(None, "model"), "w_down": P("model", None),
+              "b": P(None), "s": P()}
+    return stacked, pspecs
+
+
+def test_blocked_layout_widths():
+    stacked, pspecs = _blocked_fixture()
+    lay = treemath.blocked_layout(stacked, pspecs, 4)
+    # flatten order: b, s, w_down, wq
+    # b (7,) replicated -> ceil(7/4)=2; s () -> ceil(1/4)=1;
+    # w_down (8,5) model on dim 0 -> 40/4=10; wq (6,8) model on dim 1 -> 12
+    assert lay.widths == (2, 1, 10, 12)
+    assert lay.width == 25
+    assert lay.n_logical == 7 + 1 + 40 + 48
+    assert lay.sharded_dims == (-1, -1, 0, 1)
+
+
+def test_blocked_layout_rejects_nondivisible_sharded_dim():
+    stacked, pspecs = _blocked_fixture()
+    try:
+        treemath.blocked_layout(stacked, pspecs, 3)  # wq dim 1 = 8, 8 % 3
+    except ValueError as e:
+        assert "divisible" in str(e)
+    else:
+        raise AssertionError("expected ValueError")
+
+
+def test_blocked_ravel_split_inverse():
+    """Concatenating every shard's blocked ravel recovers each leaf exactly
+    (sharded leaves from their local blocks, replicated leaves from the
+    column slices), so the blocked order is a permutation of the global
+    ravel — nothing lost, nothing duplicated."""
+    m = 4
+    stacked, pspecs = _blocked_fixture(m=m)
+    lay = treemath.blocked_layout(stacked, pspecs, m)
+    leaves = jax.tree.leaves(stacked)
+    k = leaves[0].shape[0]
+    blocks = []
+    for j in range(m):
+        loc = []
+        for x, sdim in zip(leaves, lay.sharded_dims):
+            if sdim >= 0:
+                step = x.shape[sdim + 1] // m
+                sl = [slice(None)] * x.ndim
+                sl[sdim + 1] = slice(j * step, (j + 1) * step)
+                loc.append(x[tuple(sl)])
+            else:
+                loc.append(x)
+        blk = treemath.blocked_ravel_local(loc, lay, j)
+        assert blk.shape == (k, lay.width)
+        blocks.append(blk)
+    # reassemble per leaf and compare
+    for i, (x, shape, sdim) in enumerate(
+            zip(leaves, lay.shapes, lay.sharded_dims)):
+        segs = [treemath.blocked_split(b, lay)[i] for b in blocks]
+        if sdim >= 0:
+            step = shape[sdim] // m
+            local = list(shape)
+            local[sdim] = step
+            parts = [s.reshape((k,) + tuple(local)) for s in segs]
+            rec = jnp.concatenate(parts, axis=sdim + 1)
+        else:
+            size = int(np.prod(shape)) if shape else 1
+            rec = jnp.concatenate(segs, axis=1)[:, :size].reshape(
+                (k,) + shape)
+        np.testing.assert_array_equal(np.asarray(rec), np.asarray(x))
+
+
+def test_blocked_ravel_pads_replicated_tail_with_zeros():
+    m = 4
+    stacked, pspecs = _blocked_fixture(m=m)
+    lay = treemath.blocked_layout(stacked, pspecs, m)
+    leaves = jax.tree.leaves(stacked)
+    # last shard's replicated segments carry the ceil-split zero padding:
+    # b is leaf 0 (width 2, 7 elements -> shard 3 holds [b[6], 0])
+    loc = []
+    for x, sdim in zip(leaves, lay.sharded_dims):
+        if sdim >= 0:
+            step = x.shape[sdim + 1] // m
+            sl = [slice(None)] * x.ndim
+            sl[sdim + 1] = slice(3 * step, 4 * step)
+            loc.append(x[tuple(sl)])
+        else:
+            loc.append(x)
+    blk = treemath.blocked_ravel_local(loc, lay, 3)
+    seg_b = np.asarray(treemath.blocked_split(blk, lay)[0])
+    np.testing.assert_array_equal(seg_b[:, 0], np.asarray(leaves[0])[:, 6])
+    np.testing.assert_array_equal(seg_b[:, 1], 0.0)
+
+
+def test_blocked_segment_mask_offsets_and_keep():
+    stacked, pspecs = _blocked_fixture()
+    lay = treemath.blocked_layout(stacked, pspecs, 4)
+    # flatten order: b, s, w_down, wq — drop w_down
+    mask = np.asarray(treemath.blocked_segment_mask(
+        lay, [True, True, False, True]))
+    assert mask.shape == (lay.width,)
+    off = 0
+    for w, keep in zip(lay.widths, (1.0, 1.0, 0.0, 1.0)):
+        np.testing.assert_array_equal(mask[off:off + w], keep)
+        off += w
+
+
+def test_blocked_layout_rejects_mixed_axis_spec():
+    stacked, _ = _blocked_fixture()
+    pspecs = {"wq": P(None, ("data", "model")), "w_down": P("model", None),
+              "b": P(None), "s": P()}
+    try:
+        treemath.blocked_layout(stacked, pspecs, 4)
+    except ValueError as e:
+        assert "mixes" in str(e)
+    else:
+        raise AssertionError("expected ValueError")
